@@ -1,0 +1,43 @@
+"""Architecture config registry: ``get_config(arch)`` / ``list_archs()``.
+
+One module per assigned architecture; each exposes ``CONFIG`` (the exact
+assigned full-size config) and ``SMOKE`` (a reduced same-family config for
+CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_ARCHS = {
+    "whisper-base": "whisper_base",
+    "phi-3-vision-4.2b": "phi3_vision",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "granite-8b": "granite_8b",
+    "qwen1.5-32b": "qwen15_32b",
+    "gemma3-12b": "gemma3_12b",
+    "olmo-1b": "olmo_1b",
+}
+
+
+def list_archs():
+    return list(_ARCHS)
+
+
+def _mod(arch: str):
+    if arch not in _ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{_ARCHS[arch]}")
+
+
+def get_config(arch: str, *, shard_multiple: int = 1):
+    cfg = _mod(arch).CONFIG
+    return cfg.replace(shard_multiple=shard_multiple) if shard_multiple > 1 \
+        else cfg
+
+
+def get_smoke_config(arch: str):
+    return _mod(arch).SMOKE

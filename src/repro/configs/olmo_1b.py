@@ -1,0 +1,17 @@
+"""olmo-1b [dense]: 16L, d=2048, 16H (kv=16), d_ff=8192, V=50304.
+
+Non-parametric LayerNorm; tied embeddings; SwiGLU.  [arXiv:2402.00838]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=50_304, head_dim=128,
+    norm="nonparam_ln", tie_embeddings=True, max_seq=131_072,
+)
+
+SMOKE = CONFIG.replace(
+    name="olmo-smoke", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256, max_seq=64,
+)

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, cell)`` mirrors the batch-dict convention of
+models/model.py for the shape cell kinds train / prefill / decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeCell
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+    batch = {}
+    if cell.kind == "decode":
+        batch["tokens"] = _sds((B, 1), I32)
+        return batch
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), cd)
+        batch["tokens"] = _sds((B, S), I32)
+    elif cfg.frontend == "vision":
+        P = cfg.num_prefix_tokens
+        batch["patches"] = _sds((B, P, cfg.d_model), cd)
+        batch["tokens"] = _sds((B, S - P), I32)
+    else:
+        batch["tokens"] = _sds((B, S), I32)
+    if cell.kind == "train":
+        batch["labels"] = _sds(batch["tokens"].shape, I32)
+    return batch
+
+
+def cache_specs_sds(cfg: ModelConfig, cell: ShapeCell) -> list:
+    """ShapeDtypeStructs matching models.model.init_cache output."""
+    from repro.models import model as M
+    return jax.eval_shape(lambda: M.init_cache(cfg, cell.global_batch,
+                                               cell.seq_len))
+
+
+def make_batch(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    specs = input_specs(cfg, cell)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == I32:
+            out[name] = jax.random.randint(sub, s.shape, 0,
+                                           max(cfg.vocab_size - 1, 2), I32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, s.dtype)
+    return out

@@ -1,0 +1,22 @@
+"""FlockJAX core: the paper's contribution as a composable library.
+
+Semantic operators (paper Table 1), MODEL/PROMPT resources (§2.1) and the
+seamless optimizations (§2.3): meta-prompting, adaptive batching, caching,
+dedup — plus fusion for hybrid search.
+"""
+
+from .batching import (BatchPlan, BatchStats, ContextOverflowError,
+                       plan_batches, run_adaptive)
+from .cache import PredictionCache, cache_key
+from .fusion import (FUSION_METHODS, combanz, combmed, combmnz, combsum,
+                     fusion, max_normalize, rrf)
+from .functions import (ExecutionReport, SemanticContext, llm_complete,
+                        llm_complete_json, llm_embedding, llm_filter,
+                        llm_first, llm_last, llm_reduce, llm_reduce_json,
+                        llm_rerank)
+from .metaprompt import (MetaPrompt, build_metaprompt, build_prefix,
+                         serialize_batch, serialize_tuple)
+from .provider import (BaseProvider, LocalJaxProvider, MockProvider,
+                       estimate_tokens)
+from .resources import (Catalog, ModelResource, PromptResource,
+                        reset_global_catalog)

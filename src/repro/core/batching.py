@@ -1,0 +1,92 @@
+"""Adaptive context-window batching (paper §2.3 "Batching").
+
+FlockMTL packs as many tuples as fit the model's context window into a
+single request; if the provider reports an output/context overflow the
+batch shrinks by 10% and retries; a single tuple that still overflows
+yields NULL.  The same protocol drives our in-cluster JAX provider, whose
+"context window" is the padded device batch shape — so good packing is
+what keeps the TPU step dense.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+
+class ContextOverflowError(Exception):
+    """Raised by providers when a request exceeds the context budget."""
+
+
+@dataclass
+class BatchPlan:
+    batches: List[List[int]]            # tuple indices per request
+    est_tokens: List[int]               # estimated prompt tokens per request
+
+
+@dataclass
+class BatchStats:
+    requests: int = 0
+    retries: int = 0
+    nulls: int = 0
+    batch_sizes: List[int] = field(default_factory=list)
+
+
+def plan_batches(token_costs: Sequence[int], prefix_tokens: int,
+                 context_window: int, max_output_tokens: int,
+                 max_batch: int = 0) -> BatchPlan:
+    """Greedy fill until the context budget is reached (order-preserving).
+
+    budget per request = context_window - prefix_tokens - expected output
+    (output scales with batch size: ~max_output_tokens per tuple).
+    """
+    batches, est = [], []
+    cur, cur_tokens = [], 0
+    budget = context_window - prefix_tokens
+    for i, cost in enumerate(token_costs):
+        out_cost = max_output_tokens
+        add = cost + out_cost
+        if cur and (cur_tokens + add > budget
+                    or (max_batch and len(cur) >= max_batch)):
+            batches.append(cur)
+            est.append(cur_tokens)
+            cur, cur_tokens = [], 0
+        cur.append(i)
+        cur_tokens += add
+    if cur:
+        batches.append(cur)
+        est.append(cur_tokens)
+    return BatchPlan(batches=batches, est_tokens=est)
+
+
+def run_adaptive(tuples: Sequence, token_costs: Sequence[int],
+                 prefix_tokens: int, context_window: int,
+                 max_output_tokens: int,
+                 call: Callable[[List[int]], list],
+                 max_batch: int = 0) -> tuple[list, BatchStats]:
+    """Execute ``call(indices) -> per-index results`` under the adaptive
+    protocol.  Returns (results aligned to tuples, stats)."""
+    results: list = [None] * len(tuples)
+    stats = BatchStats()
+    plan = plan_batches(token_costs, prefix_tokens, context_window,
+                        max_output_tokens, max_batch)
+    work = list(plan.batches)
+    while work:
+        batch = work.pop(0)
+        try:
+            out = call(batch)
+            stats.requests += 1
+            stats.batch_sizes.append(len(batch))
+            for idx, val in zip(batch, out):
+                results[idx] = val
+        except ContextOverflowError:
+            stats.retries += 1
+            if len(batch) == 1:
+                results[batch[0]] = None       # single tuple too large
+                stats.nulls += 1
+                continue
+            # shrink by 10% (at least one element) and retry
+            keep = max(1, len(batch) - max(1, len(batch) // 10))
+            work.insert(0, batch[keep:])
+            work.insert(0, batch[:keep])
+    return results, stats

@@ -1,0 +1,79 @@
+"""Prediction cache: reuse LLM outputs within and across queries (paper §2.3).
+
+Exact-match cache keyed on (model@version, prompt@version or inline text,
+function kind, serialization, decode params, serialized input tuple).
+LRU in memory with optional JSON-lines persistence so reuse survives
+process restarts ("across queries").
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Optional
+
+
+def cache_key(model_ref: str, prompt_key: str, function: str,
+              serialization: str, payload: str, params: str = "") -> str:
+    h = hashlib.sha256()
+    for part in (model_ref, prompt_key, function, serialization, payload,
+                 params):
+        h.update(part.encode())
+        h.update(b"\x1f")
+    return h.hexdigest()
+
+
+class PredictionCache:
+    def __init__(self, capacity: int = 100_000,
+                 persist_path: Optional[str] = None):
+        self.capacity = capacity
+        self._data: OrderedDict[str, Any] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self._persist_path = Path(persist_path) if persist_path else None
+        if self._persist_path and self._persist_path.exists():
+            self._load()
+
+    def get(self, key: str):
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return True, self._data[key]
+            self.misses += 1
+            return False, None
+
+    def put(self, key: str, value):
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+        if self._persist_path:
+            with self._lock:
+                with self._persist_path.open("a") as f:
+                    f.write(json.dumps({"k": key, "v": value}) + "\n")
+
+    def _load(self):
+        for line in self._persist_path.read_text().splitlines():
+            try:
+                rec = json.loads(line)
+                self._data[rec["k"]] = rec["v"]
+            except (json.JSONDecodeError, KeyError):
+                continue
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+
+    @property
+    def stats(self):
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._data)}
+
+    def clear(self):
+        with self._lock:
+            self._data.clear()
+            self.hits = self.misses = 0

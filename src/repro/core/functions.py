@@ -1,0 +1,344 @@
+"""Semantic scalar & aggregate functions (paper Table 1) + the optimizer
+pipeline that backs them: dedup -> cache -> adaptive batching -> provider.
+
+Scalar (map) functions — one output per input tuple:
+    llm_complete, llm_complete_json, llm_filter, llm_embedding
+Aggregate (reduce) functions — one output per tuple group:
+    llm_reduce, llm_reduce_json, llm_rerank, llm_first, llm_last
+plus ``fusion`` (see fusion.py) for hybrid-search score combination.
+
+Every function takes ``{'model_name': ...}``-style model/prompt argument
+dicts like FlockMTL: either a registered resource name (+optional @version)
+or an inline spec, so SQL pipelines stay fixed while admins swap resources.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .batching import run_adaptive
+from .cache import PredictionCache, cache_key
+from .metaprompt import build_metaprompt, build_prefix, serialize_tuple
+from .provider import BaseProvider, MockProvider, estimate_tokens
+from .resources import Catalog, ModelResource
+
+
+@dataclass
+class ExecutionReport:
+    """Per-call optimizer trace (feeds the plan-inspection UI)."""
+    function: str = ""
+    n_tuples: int = 0
+    n_unique: int = 0
+    cache_hits: int = 0
+    requests: int = 0
+    retries: int = 0
+    nulls: int = 0
+    batch_sizes: List[int] = field(default_factory=list)
+    serialization: str = "xml"
+    meta_prompt_prefix: str = ""
+    chosen_batch_size: str = "auto"
+
+
+class SemanticContext:
+    """Catalog + provider + cache + knobs — one per database session."""
+
+    def __init__(self, catalog: Optional[Catalog] = None,
+                 provider: Optional[BaseProvider] = None,
+                 cache: Optional[PredictionCache] = None,
+                 serialization: str = "xml",
+                 enable_cache: bool = True, enable_dedup: bool = True,
+                 enable_batching: bool = True, max_batch: int = 0):
+        self.catalog = catalog or Catalog()
+        self.provider = provider or MockProvider()
+        self.cache = cache or PredictionCache()
+        self.serialization = serialization
+        self.enable_cache = enable_cache
+        self.enable_dedup = enable_dedup
+        self.enable_batching = enable_batching
+        self.max_batch = max_batch
+        self.reports: List[ExecutionReport] = []
+
+    # ---- resource resolution (name ref or inline spec) --------------------
+    def resolve_model(self, spec: Dict[str, Any]) -> ModelResource:
+        if "model_name" in spec:
+            m = self.catalog.get_model(spec["model_name"])
+            if m is None:
+                raise KeyError(f"MODEL {spec['model_name']!r} not found")
+            return m
+        return ModelResource(
+            name=spec.get("model", "inline"), version=0,
+            arch=spec.get("arch", "mock"),
+            context_window=int(spec.get("context_window", 4096)),
+            max_output_tokens=int(spec.get("max_output_tokens", 32)),
+            embedding_dim=int(spec.get("embedding_dim", 0)))
+
+    def resolve_prompt(self, spec: Dict[str, Any]) -> tuple[str, str]:
+        """Returns (prompt_text, cache_identity)."""
+        if "prompt_name" in spec:
+            p = self.catalog.get_prompt(spec["prompt_name"])
+            if p is None:
+                raise KeyError(f"PROMPT {spec['prompt_name']!r} not found")
+            return p.text, p.ref
+        text = spec.get("prompt", "")
+        return text, f"inline:{text}"
+
+
+# ---------------------------------------------------------------------------
+# map-function core: dedup -> cache -> batch -> provider
+# ---------------------------------------------------------------------------
+_LINE_RE = re.compile(r"^\s*(\d+)\s*:\s*(.*)$")
+
+
+def _parse_rows(lines: Sequence[str], n: int) -> List[Optional[str]]:
+    out: List[Optional[str]] = [None] * n
+    for ln in lines:
+        m = _LINE_RE.match(str(ln))
+        if m and int(m.group(1)) < n:
+            out[int(m.group(1))] = m.group(2).strip()
+    return out
+
+
+def _map_function(ctx: SemanticContext, kind: str, model_spec, prompt_spec,
+                  tuples: Sequence[dict]) -> List[Optional[str]]:
+    model = ctx.resolve_model(model_spec)
+    prompt_text, prompt_id = ctx.resolve_prompt(prompt_spec)
+    rep = ExecutionReport(function=kind, n_tuples=len(tuples),
+                          serialization=ctx.serialization)
+    ctx.reports.append(rep)
+    if not tuples:
+        return []
+
+    # ---- dedup: predict only over distinct serialized inputs --------------
+    ser = [serialize_tuple(t, ctx.serialization) for t in tuples]
+    if ctx.enable_dedup:
+        uniq: Dict[str, int] = {}
+        order: List[str] = []
+        first_idx: List[int] = []
+        for i, s in enumerate(ser):
+            if s not in uniq:
+                uniq[s] = len(order)
+                order.append(s)
+                first_idx.append(i)
+        back = [uniq[s] for s in ser]
+    else:
+        order = list(ser)
+        first_idx = list(range(len(ser)))
+        back = list(range(len(ser)))
+    rep.n_unique = len(order)
+    uniq_tuples = [tuples[i] for i in first_idx]
+
+    # ---- cache lookup ------------------------------------------------------
+    results: List[Optional[str]] = [None] * len(order)
+    todo: List[int] = []
+    keys = [cache_key(model.ref, prompt_id, kind, ctx.serialization, s)
+            for s in order]
+    if ctx.enable_cache:
+        for i, k in enumerate(keys):
+            hit, val = ctx.cache.get(k)
+            if hit:
+                results[i] = val
+                rep.cache_hits += 1
+            else:
+                todo.append(i)
+    else:
+        todo = list(range(len(order)))
+
+    # ---- adaptive batching over the misses ---------------------------------
+    if todo:
+        prefix = build_prefix(kind, prompt_text, ctx.serialization)
+        prefix_tokens = estimate_tokens(prefix)
+        costs = [estimate_tokens(order[i]) for i in todo]
+
+        def call(batch_idx: List[int]) -> List[Optional[str]]:
+            rows = [uniq_tuples[todo[j]] for j in batch_idx]
+            mp = build_metaprompt(kind, prompt_text, rows,
+                                  ctx.serialization)
+            raw = ctx.provider.complete(model, mp, len(rows))
+            return _parse_rows(raw, len(rows))
+
+        mb = ctx.max_batch if ctx.enable_batching else 1
+        out, stats = run_adaptive(
+            todo, costs, prefix_tokens,
+            model.context_window if ctx.enable_batching
+            else prefix_tokens + max(costs) + model.max_output_tokens + 1,
+            model.max_output_tokens, call, max_batch=mb)
+        rep.requests, rep.retries, rep.nulls = (stats.requests,
+                                                stats.retries, stats.nulls)
+        rep.batch_sizes = stats.batch_sizes
+        for j, i in enumerate(todo):
+            results[i] = out[j]
+            if ctx.enable_cache and out[j] is not None:
+                ctx.cache.put(keys[i], out[j])
+
+    return [results[b] for b in back]
+
+
+# ---------------------------------------------------------------------------
+# public scalar functions
+# ---------------------------------------------------------------------------
+def llm_complete(ctx, model_spec, prompt_spec, tuples):
+    return _map_function(ctx, "complete", model_spec, prompt_spec, tuples)
+
+
+def llm_complete_json(ctx, model_spec, prompt_spec, tuples):
+    raw = _map_function(ctx, "complete_json", model_spec, prompt_spec,
+                        tuples)
+    out = []
+    for r in raw:
+        try:
+            out.append(json.loads(r) if r is not None else None)
+        except json.JSONDecodeError:
+            out.append(None)
+    return out
+
+
+_TRUE = {"true", "yes", "1"}
+
+
+def llm_filter(ctx, model_spec, prompt_spec, tuples) -> List[bool]:
+    raw = _map_function(ctx, "filter", model_spec, prompt_spec, tuples)
+    return [str(r).strip().lower() in _TRUE if r is not None else False
+            for r in raw]
+
+
+def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
+    """Embedding with dedup + cache (no prompt; paper: 48x from batching)."""
+    model = ctx.resolve_model(model_spec)
+    rep = ExecutionReport(function="embedding", n_tuples=len(tuples),
+                          serialization=ctx.serialization)
+    ctx.reports.append(rep)
+    texts = [serialize_tuple(t, ctx.serialization) if isinstance(t, dict)
+             else str(t) for t in tuples]
+    uniq: Dict[str, int] = {}
+    order: List[str] = []
+    for t in texts:
+        if ctx.enable_dedup:
+            if t not in uniq:
+                uniq[t] = len(order)
+                order.append(t)
+        else:
+            uniq[t + f"#{len(order)}"] = len(order)
+            order.append(t)
+    back = ([uniq[t] for t in texts] if ctx.enable_dedup
+            else list(range(len(texts))))
+    rep.n_unique = len(order)
+    keys = [cache_key(model.ref, "", "embedding", "raw", t) for t in order]
+    vecs: List[Optional[list]] = [None] * len(order)
+    todo = []
+    for i, k in enumerate(keys):
+        if ctx.enable_cache:
+            hit, val = ctx.cache.get(k)
+            if hit:
+                vecs[i] = val
+                rep.cache_hits += 1
+                continue
+        todo.append(i)
+    if todo:
+        if ctx.enable_batching:
+            batches = [todo]
+        else:
+            batches = [[i] for i in todo]
+        for b in batches:
+            em = ctx.provider.embed(model, [order[i] for i in b])
+            rep.requests += 1
+            rep.batch_sizes.append(len(b))
+            for j, i in enumerate(b):
+                vecs[i] = em[j].tolist()
+                if ctx.enable_cache:
+                    ctx.cache.put(keys[i], vecs[i])
+    return np.asarray([vecs[b] for b in back], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# aggregate functions
+# ---------------------------------------------------------------------------
+def llm_reduce(ctx, model_spec, prompt_spec, tuples,
+               kind: str = "reduce") -> Optional[str]:
+    model = ctx.resolve_model(model_spec)
+    prompt_text, prompt_id = ctx.resolve_prompt(prompt_spec)
+    mp = build_metaprompt(kind, prompt_text, list(tuples),
+                          ctx.serialization)
+    key = cache_key(model.ref, prompt_id, kind, ctx.serialization,
+                    mp.suffix)
+    if ctx.enable_cache:
+        hit, val = ctx.cache.get(key)
+        if hit:
+            return val
+    out = ctx.provider.complete(model, mp, 1)
+    val = out[0] if out else None
+    if ctx.enable_cache and val is not None:
+        ctx.cache.put(key, val)
+    return val
+
+
+def llm_reduce_json(ctx, model_spec, prompt_spec, tuples):
+    raw = llm_reduce(ctx, model_spec, prompt_spec, tuples,
+                     kind="reduce_json")
+    try:
+        return json.loads(raw) if raw is not None else None
+    except json.JSONDecodeError:
+        return None
+
+
+def llm_rerank(ctx, model_spec, prompt_spec, tuples,
+               window: int = 10, stride: int = 5) -> List[int]:
+    """Zero-shot listwise rerank (Ma et al. [arXiv:2305.02156]): sliding
+    windows from the tail so the best candidates bubble to the front.
+    Returns a permutation of tuple indices, most relevant first."""
+    model = ctx.resolve_model(model_spec)
+    prompt_text, prompt_id = ctx.resolve_prompt(prompt_spec)
+    n = len(tuples)
+    perm = list(range(n))
+    if n <= 1:
+        return perm
+
+    def rank_window(idxs: List[int]) -> List[int]:
+        rows = [tuples[i] for i in idxs]
+        mp = build_metaprompt("rerank", prompt_text, rows, ctx.serialization)
+        key = cache_key(model.ref, prompt_id, "rerank", ctx.serialization,
+                        mp.suffix)
+        if ctx.enable_cache:
+            hit, val = ctx.cache.get(key)
+            if hit:
+                return [idxs[j] for j in val]
+        raw = ctx.provider.complete(model, mp, 1)
+        order = _parse_permutation(raw[0] if raw else "", len(idxs))
+        if ctx.enable_cache:
+            ctx.cache.put(key, order)
+        return [idxs[j] for j in order]
+
+    start = max(0, n - window)
+    while True:
+        seg = perm[start:start + window]
+        perm[start:start + window] = rank_window(seg)
+        if start == 0:
+            break
+        start = max(0, start - stride)
+    return perm
+
+
+def _parse_permutation(raw: str, n: int) -> List[int]:
+    seen, order = set(), []
+    for tok in re.split(r"[^\d]+", str(raw)):
+        if tok and tok.isdigit():
+            i = int(tok)
+            if 0 <= i < n and i not in seen:
+                order.append(i)
+                seen.add(i)
+    order += [i for i in range(n) if i not in seen]
+    return order
+
+
+def llm_first(ctx, model_spec, prompt_spec, tuples):
+    perm = llm_rerank(ctx, model_spec, prompt_spec, tuples)
+    return tuples[perm[0]] if tuples else None
+
+
+def llm_last(ctx, model_spec, prompt_spec, tuples):
+    perm = llm_rerank(ctx, model_spec, prompt_spec, tuples)
+    return tuples[perm[-1]] if tuples else None

@@ -1,0 +1,76 @@
+"""Score-fusion functions for hybrid search (paper Table 1: FUSION).
+
+Implements rrf / combsum / combmnz / combmed / combanz over N retriever
+score columns, vectorised with numpy.  Missing scores (a document absent
+from one retriever's top-k) are NaN.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+FUSION_METHODS = ("rrf", "combsum", "combmnz", "combmed", "combanz")
+
+
+def _scores_matrix(score_lists) -> np.ndarray:
+    """Stack score columns -> (n_docs, n_retrievers) float with NaN holes."""
+    cols = [np.asarray(s, dtype=np.float64) for s in score_lists]
+    n = {len(c) for c in cols}
+    if len(n) != 1:
+        raise ValueError("fusion inputs must share length")
+    return np.stack(cols, axis=1)
+
+
+def rrf(*score_lists, k: int = 60) -> np.ndarray:
+    """Reciprocal rank fusion: sum_i 1/(k + rank_i).  NaN -> no contribution."""
+    m = _scores_matrix(score_lists)
+    out = np.zeros(m.shape[0])
+    for j in range(m.shape[1]):
+        col = m[:, j]
+        valid = ~np.isnan(col)
+        order = np.argsort(-np.where(valid, col, -np.inf), kind="stable")
+        ranks = np.empty(m.shape[0], dtype=np.int64)
+        ranks[order] = np.arange(1, m.shape[0] + 1)
+        out += np.where(valid, 1.0 / (k + ranks), 0.0)
+    return out
+
+
+def combsum(*score_lists) -> np.ndarray:
+    m = _scores_matrix(score_lists)
+    return np.nansum(m, axis=1)
+
+
+def combmnz(*score_lists) -> np.ndarray:
+    m = _scores_matrix(score_lists)
+    nz = np.sum(~np.isnan(m) & (m != 0), axis=1)
+    return np.nansum(m, axis=1) * nz
+
+
+def combmed(*score_lists) -> np.ndarray:
+    m = _scores_matrix(score_lists)
+    with np.errstate(all="ignore"):
+        med = np.nanmedian(m, axis=1)
+    return np.where(np.isnan(med), 0.0, med)
+
+
+def combanz(*score_lists) -> np.ndarray:
+    m = _scores_matrix(score_lists)
+    nz = np.maximum(np.sum(~np.isnan(m), axis=1), 1)
+    return np.nansum(m, axis=1) / nz
+
+
+def fusion(method: str, *score_lists, **kw) -> np.ndarray:
+    fns = {"rrf": rrf, "combsum": combsum, "combmnz": combmnz,
+           "combmed": combmed, "combanz": combanz}
+    if method not in fns:
+        raise ValueError(f"unknown fusion method {method!r}; "
+                         f"choices: {FUSION_METHODS}")
+    return fns[method](*score_lists, **kw)
+
+
+def max_normalize(scores) -> np.ndarray:
+    """Per-retriever max normalisation (paper Query 3 step 4)."""
+    s = np.asarray(scores, dtype=np.float64)
+    with np.errstate(all="ignore"):
+        mx = np.nanmax(np.abs(s))
+    return s / mx if mx and not np.isnan(mx) else s

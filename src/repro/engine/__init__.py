@@ -1,0 +1,2 @@
+from .table import Table
+from .pipeline import Pipeline, ask

@@ -1,0 +1,180 @@
+"""Lazy CTE-style pipeline over Tables with semantic operators + explain().
+
+Mirrors how FlockMTL queries chain CTEs (paper Query 2/3): each chained
+call appends a plan node; ``collect()`` executes; ``explain()`` shows the
+plan with the optimizer's execution reports (batch sizes, cache hits,
+dedup factor, meta-prompt prefix) — the paper's plan-inspection interface
+(Fig. 2b) as a library call.
+
+``ask()`` is the ASK functionality: NL -> pipeline.  Faithful NL->SQL needs
+an instruction-tuned checkpoint; with research (random-weight) models it is
+a deterministic template planner — DEMO-ONLY, as recorded in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from repro.core import functions as F
+from repro.core.functions import SemanticContext
+
+from .table import Table
+
+
+@dataclass
+class PlanNode:
+    op: str
+    info: dict = field(default_factory=dict)
+    fn: Optional[Callable] = None
+    report_slot: Optional[int] = None
+
+
+class Pipeline:
+    def __init__(self, ctx: SemanticContext, source: Table,
+                 name: str = "scan"):
+        self.ctx = ctx
+        self.source = source
+        self.nodes: List[PlanNode] = [PlanNode("scan", {"rows": len(source),
+                                                        "name": name})]
+
+    def _add(self, op: str, fn, **info) -> "Pipeline":
+        p = Pipeline.__new__(Pipeline)
+        p.ctx, p.source = self.ctx, self.source
+        p.nodes = self.nodes + [PlanNode(op, info, fn)]
+        return p
+
+    # ---- relational --------------------------------------------------------
+    def select(self, *names):
+        return self._add("select", lambda t: t.select(*names), cols=names)
+
+    def filter(self, pred):
+        return self._add("filter", lambda t: t.filter(pred))
+
+    def order_by(self, key, desc=False):
+        return self._add("order_by", lambda t: t.order_by(key, desc),
+                         key=str(key), desc=desc)
+
+    def limit(self, n):
+        return self._add("limit", lambda t: t.limit(n), n=n)
+
+    def with_column(self, name, fn):
+        return self._add(
+            "project", lambda t: t.with_column(name, [fn(r)
+                                                      for r in t.rows()]),
+            out=name)
+
+    # ---- semantic scalar ops -------------------------------------------------
+    def llm_filter(self, model, prompt, cols: Sequence[str]):
+        def fn(t: Table) -> Table:
+            tuples = [{c: r[c] for c in cols} for r in t.rows()]
+            mask = F.llm_filter(self.ctx, model, prompt, tuples)
+            return t.filter_mask(mask)
+        return self._add("llm_filter", fn, model=model, prompt=prompt,
+                         cols=cols)
+
+    def llm_complete(self, out: str, model, prompt, cols: Sequence[str]):
+        def fn(t: Table) -> Table:
+            tuples = [{c: r[c] for c in cols} for r in t.rows()]
+            vals = F.llm_complete(self.ctx, model, prompt, tuples)
+            return t.with_column(out, vals)
+        return self._add("llm_complete", fn, model=model, prompt=prompt,
+                         cols=cols, out=out)
+
+    def llm_complete_json(self, out: str, model, prompt,
+                          cols: Sequence[str]):
+        def fn(t: Table) -> Table:
+            tuples = [{c: r[c] for c in cols} for r in t.rows()]
+            vals = F.llm_complete_json(self.ctx, model, prompt, tuples)
+            return t.with_column(out, vals)
+        return self._add("llm_complete_json", fn, model=model,
+                         prompt=prompt, cols=cols, out=out)
+
+    def llm_embedding(self, out: str, model, cols: Sequence[str]):
+        def fn(t: Table) -> Table:
+            tuples = [{c: r[c] for c in cols} for r in t.rows()]
+            vecs = F.llm_embedding(self.ctx, model, tuples)
+            return t.with_column(out, list(vecs))
+        return self._add("llm_embedding", fn, model=model, cols=cols,
+                         out=out)
+
+    # ---- semantic aggregates ---------------------------------------------------
+    def llm_rerank(self, model, prompt, cols: Sequence[str]):
+        def fn(t: Table) -> Table:
+            tuples = [{c: r[c] for c in cols} for r in t.rows()]
+            perm = F.llm_rerank(self.ctx, model, prompt, tuples)
+            return t.take(perm)
+        return self._add("llm_rerank", fn, model=model, prompt=prompt,
+                         cols=cols)
+
+    # ---- execution -----------------------------------------------------------
+    def collect(self) -> Table:
+        t = self.source
+        base = len(self.ctx.reports)
+        for node in self.nodes:
+            if node.fn is not None:
+                before = len(self.ctx.reports)
+                t = node.fn(t)
+                if len(self.ctx.reports) > before:
+                    node.report_slot = before
+                node.info["rows_out"] = len(t)
+        self._last_reports = self.ctx.reports[base:]
+        return t
+
+    def reduce(self, model, prompt, cols: Sequence[str]):
+        t = self.collect()
+        tuples = [{c: r[c] for c in cols} for r in t.rows()]
+        return F.llm_reduce(self.ctx, model, prompt, tuples)
+
+    def explain(self) -> str:
+        lines = ["Pipeline plan:"]
+        for i, node in enumerate(self.nodes):
+            info = {k: v for k, v in node.info.items()
+                    if k not in ("model", "prompt")}
+            lines.append(f"  [{i}] {node.op:18s} {info}")
+            if node.report_slot is not None:
+                r = self.ctx.reports[node.report_slot]
+                lines.append(
+                    f"        tuples={r.n_tuples} unique={r.n_unique} "
+                    f"cache_hits={r.cache_hits} requests={r.requests} "
+                    f"retries={r.retries} nulls={r.nulls} "
+                    f"batch_sizes={r.batch_sizes[:8]} "
+                    f"serialization={r.serialization}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# ASK: natural language -> pipeline (deterministic template planner)
+# ---------------------------------------------------------------------------
+_SEVERITY = re.compile(r"\b(severity|score|rate|rating)\b", re.I)
+_FILTER = re.compile(r"\b(mention\w*|about|related to|regarding)\s+(.+?)"
+                     r"(?:\s+and\b|[.,]|$)", re.I)
+_SUMMARIZE = re.compile(r"\b(summari[sz]e|overview)\b", re.I)
+
+
+def ask(ctx: SemanticContext, table: Table, question: str,
+        model={"model": "ask-default", "context_window": 8192},
+        text_cols: Optional[Sequence[str]] = None):
+    """NL question -> (generated pseudo-SQL, Pipeline).  DEMO-ONLY planner."""
+    cols = list(text_cols or table.column_names)
+    pipe = Pipeline(ctx, table, name="ask")
+    sql = [f"SELECT * FROM t"]
+    m = _FILTER.search(question)
+    if m:
+        topic = m.group(2).strip()
+        pipe = pipe.llm_filter(model, {"prompt": f"is about {topic}"}, cols)
+        sql.append(f"WHERE llm_filter(..., 'is about {topic}', "
+                   f"{{{', '.join(cols)}}})")
+    if _SEVERITY.search(question):
+        pipe = pipe.llm_complete_json(
+            "assessment", model,
+            {"prompt": 'extract {"issue": <short>, "severity": <1-5>}'},
+            cols)
+        sql.append("SELECT *, llm_complete_json(..., 'severity json', ...)")
+    if _SUMMARIZE.search(question):
+        pipe = pipe.llm_complete("summary", model,
+                                 {"prompt": "summarize in one sentence"},
+                                 cols)
+        sql.append("SELECT *, llm_complete(..., 'summarize', ...)")
+    return "\n".join(sql), pipe

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash-decode (single token over a masked cache)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window: int = 0,
+                         scale: float | None = None):
+    """q: (B, 1, H, hd); caches: (B, S, KH, hd); pos: scalar or (B,)."""
+    B, _, H, hd = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+    qg = (q.astype(F32) * scale).reshape(B, KH, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(F32))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    k_pos = jnp.arange(S)
+    mask = k_pos[None, :] <= pos_b[:, None]
+    if window:
+        mask = mask & (pos_b[:, None] - k_pos[None, :] < window)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-37)
+    o = jnp.einsum("bkgs,bskh->bkgh", p / l, v_cache.astype(F32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (full masked softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None, kv_len: int | None = None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KH, hd).  Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+    kv_len = Sk if kv_len is None else kv_len
+    qg = q.reshape(B, Sq, KH, G, hd).astype(F32) * scale
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k.astype(F32))
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = (k_pos[None, :] < kv_len)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    else:
+        mask = jnp.broadcast_to(mask, (Sq, Sk))
+    if window:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-37)
+    o = jnp.einsum("bkgqt,btkh->bkgqh", p / l, v.astype(F32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)

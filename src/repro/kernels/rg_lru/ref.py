@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: sequential diagonal linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def rg_lru_ref(a, b):
+    """a, b: (B, S, di) -> h_all: (B, S, di) with h_t = a_t*h_{t-1} + b_t."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    af = a.astype(F32).transpose(1, 0, 2)
+    bf = b.astype(F32).transpose(1, 0, 2)
+    h0 = jnp.zeros(af.shape[1:], F32)
+    _, y = jax.lax.scan(step, h0, (af, bf))
+    return y.transpose(1, 0, 2).astype(a.dtype)

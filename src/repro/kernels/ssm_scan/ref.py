@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: sequential selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ssm_scan_ref(x, dt, Bm, Cm, A_log, D):
+    """x, dt: (B, S, di); Bm, Cm: (B, S, N); A_log: (di, N); D: (di,)."""
+    A = -jnp.exp(A_log.astype(F32))
+    xf, dtf = x.astype(F32), dt.astype(F32)
+    a = jnp.exp(dtf[..., None] * A)                       # (B,S,di,N)
+    bu = (dtf * xf)[..., None] * Bm.astype(F32)[:, :, None, :]
+
+    def step(h, inp):
+        a_t, bu_t, c_t = inp
+        h = a_t * h + bu_t
+        return h, jnp.sum(h * c_t[:, None, :], axis=-1)
+
+    B, S, di = x.shape
+    h0 = jnp.zeros((B, di, A.shape[-1]), F32)
+    _, y = jax.lax.scan(step, h0,
+                        (a.transpose(1, 0, 2, 3), bu.transpose(1, 0, 2, 3),
+                         Cm.astype(F32).transpose(1, 0, 2)))
+    y = y.transpose(1, 0, 2)
+    return (y + D.astype(F32) * xf).astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: full (N, Q) cosine scores + exact top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def topk_sim_ref(corpus, queries, k: int):
+    """corpus: (N, D); queries: (Q, D) -> (scores (Q,k), idx (Q,k))."""
+    qn = queries / jnp.maximum(
+        jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
+    cn = corpus / jnp.maximum(
+        jnp.linalg.norm(corpus, axis=-1, keepdims=True), 1e-9)
+    s = jnp.einsum("qd,nd->qn", qn.astype(F32), cn.astype(F32))
+    return jax.lax.top_k(s, k)

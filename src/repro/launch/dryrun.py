@@ -1,0 +1,341 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware, and extracts
+the roofline terms from the compiled artifacts.
+
+Methodology notes (verified experimentally in this container):
+  * XLA's HLO cost model counts while-loop (lax.scan) bodies ONCE, so the
+    scanned-over-layers production program under-reports FLOPs.  We
+    therefore lower small *probe* configs with python-unrolled layers
+    (1 repeat per stage, and 2 repeats for the probed stage) and solve for
+    the per-stage marginal cost:
+        body_i  = cost(probe_i) - cost(base)
+        total   = cost(base) + sum_i (repeats_i - 1) * body_i
+    The true scanned program is still lowered and compiled for the memory
+    analysis and as the multi-pod shardability proof.
+  * ``compiled.cost_analysis()`` reports PER-DEVICE flops/bytes of the
+    SPMD-partitioned module (verified), so roofline terms divide by
+    single-chip peaks.
+  * collective bytes are parsed from ``compiled.as_text()`` (per-device
+    shapes); ring all-reduce counts 2x its payload, other collectives 1x.
+"""
+
+# The first two lines MUST run before any other import (jax locks the
+# device count on first init).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.configs.specs import input_specs
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.models.config import SHAPES, ModelConfig, ShapeCell, cell_is_supported
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.serving.steps import make_decode_step, make_prefill_step
+from repro.training import HParams, adamw_init, make_train_step, opt_specs
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective payload bytes by op kind (ring-transfer conv.)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0.0) + nbytes * _COLL_FACTOR[op]
+    return out
+
+
+# --------------------------------------------------------------------------
+# step builders (shared by the real lowering and the cost probes)
+# --------------------------------------------------------------------------
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """Returns (fn, example_args (SDS), in_shardings, donate_argnums)."""
+    policy = S.MeshPolicy(mesh, cfg, cell.global_batch)
+    pspecs = S.param_specs(cfg, mesh)
+    params_sds = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    batch_sds = input_specs(cfg, cell)
+    bspecs = S.batch_specs(cfg, mesh, cell.global_batch, cell.kind)
+
+    if cell.kind == "train":
+        hp = HParams(accum_steps=cfg.train_accum_steps)
+        step = make_train_step(cfg, hp, policy)
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        ospecs = opt_specs(pspecs, params_sds, mesh)
+        args = (params_sds, opt_sds, batch_sds)
+        shardings = (S.to_shardings(mesh, pspecs),
+                     S.to_shardings(mesh, ospecs),
+                     S.to_shardings(mesh, bspecs))
+        return step, args, shardings, (0, 1)
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(cfg, cache_len=cell.seq_len, policy=policy)
+        args = (params_sds, batch_sds)
+        shardings = (S.to_shardings(mesh, pspecs),
+                     S.to_shardings(mesh, bspecs))
+        return step, args, shardings, ()
+
+    # decode: one new token against a cache of seq_len
+    cache_sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, cell.global_batch, cell.seq_len))
+    cspecs = S.cache_specs(cfg, mesh, cell.global_batch)
+    step = make_decode_step(cfg, policy)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params_sds, batch_sds["tokens"], cache_sds, pos_sds)
+    shardings = (S.to_shardings(mesh, pspecs),
+                 NamedSharding(mesh, P(S._dp(mesh, cell.global_batch), None)),
+                 S.to_shardings(mesh, cspecs),
+                 NamedSharding(mesh, P()))
+    return step, args, shardings, (2,)
+
+
+def lower_and_analyze(cfg, cell, mesh, *, want_memory=True):
+    fn, args, shardings, donate = build_cell(cfg, cell, mesh)
+    jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    res = {
+        "compile_s": round(dt, 2),
+        "flops_per_dev": float(ca.get("flops", 0.0)),
+        "bytes_per_dev": float(ca.get("bytes accessed", 0.0)),
+        "collectives": parse_collective_bytes(compiled.as_text()),
+    }
+    if want_memory:
+        ma = compiled.memory_analysis()
+        res["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+    return res
+
+
+# --------------------------------------------------------------------------
+# cost probes (per-stage marginal cost; see module docstring)
+# --------------------------------------------------------------------------
+def _probe_variants(cfg: ModelConfig):
+    dec = [(list(pat), 1) for pat, _ in cfg.stages()]
+    enc = [(list(pat), 1) for pat, _ in cfg.encoder_stages()]
+    base = cfg.replace(stages_override=tuple((tuple(p), r) for p, r in dec),
+                       enc_stages_override=tuple((tuple(p), r)
+                                                 for p, r in enc),
+                       unroll_layers=True, unroll_inner=True)
+    probes = []
+    for i in range(len(dec)):
+        d2 = [(p, 2 if j == i else 1) for j, (p, _) in enumerate(dec)]
+        probes.append(("dec", i, base.replace(
+            stages_override=tuple((tuple(p), r) for p, r in d2))))
+    for i in range(len(enc)):
+        e2 = [(p, 2 if j == i else 1) for j, (p, _) in enumerate(enc)]
+        probes.append(("enc", i, base.replace(
+            enc_stages_override=tuple((tuple(p), r) for p, r in e2))))
+    return base, probes
+
+
+def probed_costs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """Scan-corrected per-device flops/bytes/collectives for the full model."""
+    base_cfg, probes = _probe_variants(cfg)
+    base = lower_and_analyze(base_cfg, cell, mesh, want_memory=False)
+
+    def combine(total, body, mult):
+        total["flops_per_dev"] += mult * max(body["flops_per_dev"], 0.0)
+        total["bytes_per_dev"] += mult * max(body["bytes_per_dev"], 0.0)
+        for k, v in body["collectives"].items():
+            total["collectives"][k] = total["collectives"].get(k, 0.0) \
+                + mult * max(v, 0.0)
+
+    total = {"flops_per_dev": base["flops_per_dev"],
+             "bytes_per_dev": base["bytes_per_dev"],
+             "collectives": dict(base["collectives"]),
+             "probe_compile_s": base["compile_s"]}
+    dec_reps = [r for _, r in cfg.stages()]
+    enc_reps = [r for _, r in cfg.encoder_stages()]
+    for kind, i, pcfg in probes:
+        pr = lower_and_analyze(pcfg, cell, mesh, want_memory=False)
+        body = {
+            "flops_per_dev": pr["flops_per_dev"] - base["flops_per_dev"],
+            "bytes_per_dev": pr["bytes_per_dev"] - base["bytes_per_dev"],
+            "collectives": {
+                k: pr["collectives"].get(k, 0.0)
+                - base["collectives"].get(k, 0.0)
+                for k in set(pr["collectives"]) | set(base["collectives"])},
+        }
+        reps = (dec_reps if kind == "dec" else enc_reps)[i]
+        combine(total, body, reps - 1)
+        total["probe_compile_s"] += pr["compile_s"]
+    return total
+
+
+# --------------------------------------------------------------------------
+# roofline
+# --------------------------------------------------------------------------
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """6*N_active*D for train, 2*N_active*D forward-only."""
+    n = cfg.active_params()
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch        # decode: one token per row
+
+
+def roofline(cost: dict, n_chips: int, cfg, cell) -> dict:
+    t_compute = cost["flops_per_dev"] / PEAK_FLOPS_BF16
+    t_memory = cost["bytes_per_dev"] / HBM_BW
+    coll_bytes = sum(cost["collectives"].values())
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    hlo_flops_global = cost["flops_per_dev"] * n_chips
+    mf = model_flops(cfg, cell)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "collective_bytes_per_dev": coll_bytes,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global else 0,
+        # roofline fraction: useful model flops vs chip-seconds implied by
+        # the *dominant* term (what fraction of peak the step achieves)
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS_BF16)
+        / max(terms[dominant], 1e-30),
+    }
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             *, skip_existing: bool = True, overrides: dict | None = None,
+             variant: str = "") -> dict:
+    name = f"{arch}__{shape}__{mesh_kind}"
+    if variant:
+        name += f"__{variant}"
+    out_path = out_dir / f"{name}.json"
+    if skip_existing and out_path.exists():
+        return json.loads(out_path.read_text())
+    cell = SHAPES[shape]
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "variant": variant, "overrides": overrides or {},
+           "time": time.strftime("%Y-%m-%d %H:%M:%S")}
+    if not cell_is_supported(arch, shape):
+        rec["status"] = "SKIP"
+        rec["reason"] = ("full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md §4)")
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    cfg = get_config(arch, shard_multiple=mesh.shape["model"])
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    try:
+        full = lower_and_analyze(cfg, cell, mesh, want_memory=True)
+        rec["memory"] = full["memory"]
+        rec["compile_s"] = full["compile_s"]
+        rec["scanned_program"] = {k: full[k] for k in
+                                  ("flops_per_dev", "bytes_per_dev",
+                                   "collectives")}
+        cost = probed_costs(cfg, cell, mesh)
+        rec["cost"] = cost
+        rec["roofline"] = roofline(cost, n_chips, cfg, cell)
+        rec["status"] = "OK"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--overrides", default="",
+                    help="JSON ModelConfig overrides (hillclimb variants)")
+    ap.add_argument("--variant", default="",
+                    help="variant label appended to the output file name")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mk, out_dir,
+                               skip_existing=not args.force,
+                               overrides=overrides, variant=args.variant)
+                status = rec["status"]
+                n_ok += status == "OK"
+                n_skip += status == "SKIP"
+                n_fail += status == "FAIL"
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']:10s} "
+                             f"frac={r['roofline_fraction']:.3f} "
+                             f"useful={r['useful_flops_ratio']:.3f}")
+                elif status == "FAIL":
+                    extra = rec["error"][:120]
+                print(f"[{status:4s}] {arch:24s} {shape:12s} {mk:6s} "
+                      f"{time.time()-t0:6.1f}s {extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

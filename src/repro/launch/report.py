@@ -1,0 +1,108 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import list_archs
+from repro.models.config import SHAPES
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def load(dir_: Path):
+    recs = {}
+    for p in sorted(dir_.glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def roofline_table(recs, mesh="single"):
+    head = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant |"
+            " useful | roofline | HBM/dev | note |")
+    sep = "|" + "---|" * 10
+    rows = [head, sep]
+    for arch in list_archs():
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                rows.append(f"| {arch} | {shape} | - | - | - | MISSING | "
+                            "- | - | - | not yet run |")
+                continue
+            if r["status"] == "SKIP":
+                rows.append(f"| {arch} | {shape} | - | - | - | SKIP | - |"
+                            f" - | - | {r['reason'][:60]} |")
+                continue
+            if r["status"] == "FAIL":
+                rows.append(f"| {arch} | {shape} | - | - | - | FAIL | - |"
+                            f" - | - | {r['error'][:60]} |")
+                continue
+            ro = r["roofline"]
+            mem = r["memory"]
+            hbm = mem["argument_bytes"] + mem["temp_bytes"] \
+                + mem["output_bytes"] - mem["alias_bytes"]
+            fits = "" if hbm < 16 * 2 ** 30 else " **>16GB HBM**"
+            rows.append(
+                f"| {arch} | {shape} | {ro['t_compute_s']:.4f} |"
+                f" {ro['t_memory_s']:.4f} | {ro['t_collective_s']:.4f} |"
+                f" {ro['dominant']} | {ro['useful_flops_ratio']:.3f} |"
+                f" {ro['roofline_fraction']:.4f} | {fmt_bytes(hbm)} |"
+                f"{fits} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    head = ("| arch | shape | mesh | status | compile(s) | args/dev |"
+            " temps/dev | collectives/dev |")
+    sep = "|" + "---|" * 8
+    rows = [head, sep]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if r["status"] != "OK":
+            rows.append(f"| {arch} | {shape} | {mesh} | {r['status']} |"
+                        " - | - | - | - |")
+            continue
+        mem = r["memory"]
+        coll = sum(r["cost"]["collectives"].values())
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | OK | {r['compile_s']:.1f} |"
+            f" {fmt_bytes(mem['argument_bytes'])} |"
+            f" {fmt_bytes(mem['temp_bytes'])} | {fmt_bytes(coll)} |")
+    return "\n".join(rows)
+
+
+def summarize(recs):
+    ok = sum(r["status"] == "OK" for r in recs.values())
+    skip = sum(r["status"] == "SKIP" for r in recs.values())
+    fail = sum(r["status"] == "FAIL" for r in recs.values())
+    return f"{ok} OK / {skip} SKIP / {fail} FAIL of {len(recs)} records"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun", "summary"])
+    args = ap.parse_args()
+    recs = load(Path(args.dir))
+    print(summarize(recs))
+    if args.table == "roofline":
+        print(roofline_table(recs, args.mesh))
+    elif args.table == "dryrun":
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Model configuration for the FlockJAX architecture zoo.
+
+One unified decoder-stack description covers all 10 assigned architectures:
+dense / GQA / sliding-window / local:global transformers, MoE (top-k with
+shared experts), Mamba-1 SSM, RG-LRU hybrid (Griffin/RecurrentGemma), and the
+Whisper encoder-decoder.  Modality frontends (audio conv stem, vision patch
+encoder) are STUBS per the assignment: ``input_specs`` feeds precomputed
+frame/patch embeddings.
+
+Layer-kind strings used in ``pattern``:
+  "attn"   full (global) causal self-attention
+  "local"  sliding-window causal self-attention (window = ``window_size``)
+  "swa"    alias of "local" (Mixtral-style sliding window)
+  "rec"    RG-LRU gated linear recurrence block (Griffin recurrent block)
+  "mamba"  Mamba-1 selective-SSM block (no separate FFN; d_ff == 0)
+
+The stack is organised into *stages*: maximal runs of the repeating pattern,
+executed with ``lax.scan`` over stacked per-layer parameters (compile-time
+O(1) in depth).  A remainder prefix becomes a final 1-repeat stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+ATTN_KINDS = ("attn", "local", "swa", "global")
+MIXER_KINDS = ATTN_KINDS + ("rec", "mamba")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    pattern: Tuple[str, ...] = ("attn",)
+    window_size: int = 0             # for "local"/"swa" layers
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 0.0    # 0 -> same as rope_theta (gemma3: locals 10k, global 1M)
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm | nonparam_ln
+    glu: bool = True                 # gated (SwiGLU/GeGLU) FFN; False -> plain MLP
+    act: str = "silu"                # silu | gelu
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma-style sqrt(d) embedding multiplier
+    # ---- MoE ----
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-routed-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_gathered_spec: str = "replicated"   # replicated | auto (let GSPMD
+                                            #   place the dispatch tensor)
+    # ---- SSM / recurrent ----
+    d_inner: int = 0
+    ssm_state: int = 0
+    conv_width: int = 4
+    dt_rank: int = 0
+    rglru_blocks: int = 16           # block-diagonal gate blocks
+    ssm_fuse: str = "none"           # none | chunk (fused chunked scan: the
+                                     #   (B,S,di,state) discretised tensors
+                                     #   exist only per-chunk, like the
+                                     #   Pallas kernel)
+    # ---- encoder-decoder / frontends ----
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq: int = 0             # whisper: 1500 frames
+    frontend: str = ""               # "" | "audio" | "vision"
+    num_prefix_tokens: int = 0       # vlm: image patch tokens prepended to text
+    # ---- numerics / execution ----
+    max_seq: int = 131_072
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_block_k: int = 512          # chunked-attention KV block
+    attn_impl: str = "masked"        # masked | blocked (static block-pair
+                                     #   list skips fully-masked tiles)
+    scan_chunk: int = 256            # SSM/RG-LRU within-chunk assoc-scan length
+    remat: bool = True               # activation checkpointing per layer
+    remat_policy: str = "full"       # full | dots (save matmul outputs)
+    kv_quant: str = "none"           # none | int8 (quantized KV cache)
+    train_accum_steps: int = 1       # gradient-accumulation microbatches
+    unroll_inner: bool = False       # python-loop inner chunk loops (cost lowering)
+    unroll_layers: bool = False      # python-loop over stage repeats (cost lowering)
+    # cost-probe overrides: ((pattern, repeats), ...); () -> derive from depth.
+    # XLA's cost model counts while-loop bodies once (verified), so the
+    # dry-run lowers small unrolled probe configs and solves for per-stage
+    # marginal cost — see launch/dryrun.py.
+    stages_override: tuple = ()
+    enc_stages_override: tuple = ()
+    use_pallas: bool = False         # TPU kernels; False -> pure-jnp reference path
+    # sharding-driven physical padding (see DESIGN.md §6); 1 disables
+    shard_multiple: int = 1
+
+    # ---------------- derived ----------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_num_heads(self) -> int:
+        """Q heads padded up so head-sharding divides the model axis."""
+        m = self.shard_multiple
+        if m <= 1 or self.num_heads < m:
+            return self.num_heads
+        return _round_up(self.num_heads, m)
+
+    @property
+    def padded_num_kv_heads(self) -> int:
+        """MHA (H == KV) pads both so the 1:1 grouping survives padding;
+        GQA keeps its true KV head count (replicated if not divisible)."""
+        if self.num_heads == self.num_kv_heads:
+            return self.padded_num_heads
+        return self.num_kv_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.shard_multiple
+        return _round_up(self.vocab_size, m) if m > 1 else self.vocab_size
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def theta_local(self) -> float:
+        return self.rope_theta_local or self.rope_theta
+
+    def stages(self) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
+        """(pattern, repeats) segments covering num_layers exactly."""
+        if self.stages_override:
+            return tuple((tuple(p), r) for p, r in self.stages_override)
+        p = self.pattern
+        reps, rem = divmod(self.num_layers, len(p))
+        out = []
+        if reps:
+            out.append((p, reps))
+        if rem:
+            out.append((p[:rem], 1))
+        return tuple(out)
+
+    def encoder_stages(self) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
+        if not self.is_encoder_decoder:
+            return ()
+        if self.enc_stages_override:
+            return tuple((tuple(p), r) for p, r in self.enc_stages_override)
+        return ((("attn",), self.num_encoder_layers),)
+
+    def moe_capacity(self, tokens_per_group: int) -> int:
+        """Per-expert slot capacity for a dispatch group of given size."""
+        ideal = tokens_per_group * self.top_k / self.num_experts
+        c = int(math.ceil(ideal * self.capacity_factor))
+        return max(1, min(_round_up(c, 4), tokens_per_group * self.top_k))
+
+    def num_params(self) -> int:
+        """Analytic parameter count (unpadded), for MODEL_FLOPS."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n = self.vocab_size * d                       # embedding
+        if not self.tie_embeddings:
+            n += d * self.vocab_size                  # lm head
+        per_kind = {}
+        attn = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd \
+            + self.num_heads * hd * d
+        if self.qkv_bias:
+            attn += (self.num_heads + 2 * self.num_kv_heads) * hd
+        ffn_mult = 3 if self.glu else 2
+        dense_ffn = ffn_mult * d * self.d_ff
+        if self.num_experts:
+            moe = d * self.num_experts \
+                + self.num_experts * ffn_mult * d * self.moe_d_ff \
+                + (self.num_shared_experts * ffn_mult * d * self.moe_d_ff
+                   if self.num_shared_experts else 0)
+            mix_plus_ffn = attn + moe
+        else:
+            mix_plus_ffn = attn + dense_ffn
+        per_kind.update({k: mix_plus_ffn for k in ATTN_KINDS})
+        if self.d_inner:
+            di, s = self.d_inner, self.ssm_state
+            per_kind["mamba"] = (d * 2 * di + self.conv_width * di
+                                 + di * (self.dt_rank + 2 * s)
+                                 + self.dt_rank * di + di * s + di + di * d)
+            bs = di // self.rglru_blocks
+            per_kind["rec"] = (2 * d * di + self.conv_width * di
+                               + 2 * self.rglru_blocks * bs * bs + di
+                               + di * d + dense_ffn)
+        for pat, reps in self.stages():
+            for k in pat:
+                n += per_kind[k] * reps
+        if self.is_encoder_decoder:
+            enc_attn = 4 * d * d
+            n += self.num_encoder_layers * (enc_attn + dense_ffn)
+            n += self.num_layers * enc_attn          # decoder cross-attention
+        return n
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: only routed top-k)."""
+        if not self.num_experts:
+            return self.num_params()
+        d = self.d_model
+        ffn_mult = 3 if self.glu else 2
+        dead = (self.num_experts - self.top_k) * ffn_mult * d * self.moe_d_ff
+        n_moe_layers = sum(
+            reps * sum(1 for k in pat if k in ATTN_KINDS)
+            for pat, reps in self.stages())
+        return self.num_params() - dead * n_moe_layers
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+    name: str                         # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# archs for which long_500k is runnable (sub-quadratic / windowed); the
+# rest SKIP that cell per DESIGN.md §4.
+LONG_CONTEXT_OK = {
+    "falcon-mamba-7b", "recurrentgemma-9b", "mixtral-8x7b", "gemma3-12b",
+}
+
+
+def cell_is_supported(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True

@@ -1,0 +1,413 @@
+"""Stack assembly: init / train forward / prefill / decode for every arch.
+
+Layers are organised into *stages* (see config.stages()): parameters of a
+stage are stacked along a leading ``repeats`` axis and executed with
+``lax.scan`` so compile time is O(#stages), not O(#layers).  The decode and
+prefill paths thread a cache pytree with the same stage structure through
+the scan.
+
+Batch dict convention (all optional keys absent when unused):
+  tokens   (B, S_txt) int32          text tokens
+  labels   (B, S_txt) int32          next-token labels (-1 = ignore)
+  frames   (B, enc_seq, d) compute   audio-frontend stub embeddings (whisper)
+  patches  (B, P, d) compute         vision-frontend stub embeddings (phi3v)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ATTN_KINDS, ModelConfig
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, kind: str, key, cross: bool):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": L.init_norm(cfg, ks[0], cfg.d_model)}
+    if kind in ATTN_KINDS:
+        p["attn"] = L.init_attention(cfg, ks[1])
+        if cross:
+            p["ln_x"] = L.init_norm(cfg, ks[4], cfg.d_model)
+            p["xattn"] = L.init_attention(cfg, ks[5], cross=True)
+        p["ln2"] = L.init_norm(cfg, ks[2], cfg.d_model)
+        if cfg.num_experts:
+            p["moe"] = L.init_moe(cfg, ks[3])
+        else:
+            p["ffn"] = L.init_ffn(cfg, ks[3])
+    elif kind == "rec":
+        p["rec"] = L.init_rglru(cfg, ks[1])
+        p["ln2"] = L.init_norm(cfg, ks[2], cfg.d_model)
+        p["ffn"] = L.init_ffn(cfg, ks[3])
+    elif kind == "mamba":
+        p["mamba"] = L.init_mamba(cfg, ks[1])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_stage(cfg: ModelConfig, pattern, repeats: int, key, cross: bool):
+    reps = []
+    for r in range(repeats):
+        key, sub = jax.random.split(key)
+        blocks = {}
+        for j, kind in enumerate(pattern):
+            sub, k2 = jax.random.split(sub)
+            blocks[f"b{j}"] = _init_layer(cfg, kind, k2, cross)
+        reps.append(blocks)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+
+def init_params(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": (jax.random.normal(ks[0], (Vp, d)) * d ** -0.5).astype(dt),
+        "final_norm": L.init_norm(cfg, ks[1], d),
+        "stages": [
+            _init_stage(cfg, pat, reps, jax.random.fold_in(ks[2], i),
+                        cross=cfg.is_encoder_decoder)
+            for i, (pat, reps) in enumerate(cfg.stages())
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[3], (d, Vp)) * d ** -0.5).astype(dt)
+    if cfg.is_encoder_decoder:
+        params["encoder"] = {
+            "stages": [
+                _init_stage(cfg, pat, reps, jax.random.fold_in(ks[4], i),
+                            cross=False)
+                for i, (pat, reps) in enumerate(cfg.encoder_stages())
+            ],
+            "final_norm": L.init_norm(cfg, ks[5], d),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# single-layer application (shared by train / prefill / decode)
+# --------------------------------------------------------------------------
+def apply_layer(cfg: ModelConfig, kind: str, p, x, *, mode: str, positions,
+                pos=None, cache=None, policy=L.NULL_POLICY, enc_out=None,
+                causal=True, cache_len=0):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), F32)
+    new_cache = {}
+    if kind in ATTN_KINDS:
+        h = L.norm_apply(cfg, p.get("ln1", {}), x)
+        if mode == "decode":
+            y, new_attn = L.self_attention_decode(
+                cfg, p["attn"], h, kind, cache["attn"], pos, policy)
+        elif mode == "extend":
+            y, new_attn = L.self_attention_extend(
+                cfg, p["attn"], h, kind, cache["attn"], pos, policy)
+        else:
+            y, (k, v) = L.self_attention_train(
+                cfg, p["attn"], h, kind, positions, policy, causal=causal)
+            if mode == "prefill":
+                S = k.shape[1]
+                pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+                if cfg.kv_quant == "int8":
+                    kq, ks = L.quantize_kv(k)
+                    vq, vs = L.quantize_kv(v)
+                    new_attn = {
+                        "k": policy(jnp.pad(kq, pad), "kv_cache"),
+                        "v": policy(jnp.pad(vq, pad), "kv_cache"),
+                        "k_scale": policy(jnp.pad(ks, pad), "kv_cache"),
+                        "v_scale": policy(jnp.pad(vs, pad), "kv_cache"),
+                    }
+                else:
+                    new_attn = {"k": policy(jnp.pad(k, pad), "kv_cache"),
+                                "v": policy(jnp.pad(v, pad), "kv_cache")}
+        x = x + y
+        if "xattn" in p:
+            hx = L.norm_apply(cfg, p.get("ln_x", {}), x)
+            if mode in ("decode", "extend"):
+                ek, ev = cache["xattn"]["k"], cache["xattn"]["v"]
+            else:
+                ek, ev = L.encode_cross_kv(cfg, p["xattn"], enc_out, policy)
+            x = x + L.cross_attention(cfg, p["xattn"], hx, ek, ev, policy)
+            if mode in ("prefill", "decode", "extend"):
+                new_cache["xattn"] = {"k": ek, "v": ev}
+        h2 = L.norm_apply(cfg, p.get("ln2", {}), x)
+        if cfg.num_experts:
+            y2, aux = L.moe_apply(cfg, p["moe"], h2, policy)
+        else:
+            y2 = L.ffn_apply(cfg, p["ffn"], h2, policy)
+        x = x + y2
+        if mode in ("prefill", "decode", "extend"):
+            new_cache["attn"] = new_attn
+    elif kind == "rec":
+        # the decode path handles any sequence length (conv + scan carry a
+        # state), so prefill == decode-with-zero-state, extend == decode.
+        h = L.norm_apply(cfg, p.get("ln1", {}), x)
+        if mode == "train":
+            y = L.rglru_apply_train(cfg, p["rec"], h, policy)
+        else:
+            c = (cache["rec"] if mode in ("decode", "extend")
+                 else L.init_rglru_cache(cfg, x.shape[0],
+                                         jnp.dtype(cfg.compute_dtype)))
+            y, new_cache["rec"] = L.rglru_apply_decode(cfg, p["rec"], h, c,
+                                                       policy)
+        x = x + y
+        x = x + L.ffn_apply(cfg, p["ffn"], L.norm_apply(cfg, p.get("ln2", {}), x),
+                            policy)
+    elif kind == "mamba":
+        h = L.norm_apply(cfg, p.get("ln1", {}), x)
+        if mode == "train":
+            y = L.mamba_apply_train(cfg, p["mamba"], h, policy)
+        else:
+            c = (cache["mamba"] if mode in ("decode", "extend")
+                 else L.init_mamba_cache(cfg, x.shape[0],
+                                         jnp.dtype(cfg.compute_dtype)))
+            y, new_cache["mamba"] = L.mamba_apply_decode(cfg, p["mamba"], h,
+                                                         c, policy)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return policy(x, "act"), new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# stage execution (scan over stacked repeats)
+# --------------------------------------------------------------------------
+def _run_stages(cfg: ModelConfig, stages_params, pattern_list, x, *, mode,
+                positions, pos=None, caches=None, policy=L.NULL_POLICY,
+                enc_out=None, causal=True, cache_len=0):
+    """pattern_list: list of (pattern, repeats) matching stages_params."""
+    new_caches = []
+    total_aux = jnp.zeros((), F32)
+
+    for si, ((pattern, repeats), sp) in enumerate(
+            zip(pattern_list, stages_params)):
+        stage_cache = None if caches is None else caches[si]
+
+        def body(carry, inp, _pattern=pattern):
+            xc, aux_c = carry
+            lp, lc = inp
+            ncs = {}
+            for j, kind in enumerate(_pattern):
+                xc, nc, aux = apply_layer(
+                    cfg, kind, lp[f"b{j}"], xc, mode=mode,
+                    positions=positions, pos=pos,
+                    cache=None if lc is None else lc[f"b{j}"],
+                    policy=policy, enc_out=enc_out, causal=causal,
+                    cache_len=cache_len)
+                ncs[f"b{j}"] = nc
+                aux_c = aux_c + aux
+            return (xc, aux_c), ncs
+
+        if cfg.remat:
+            pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                   if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=pol)
+
+        if cfg.unroll_layers:
+            # python loop over repeats (cost-probe lowering; see dryrun.py)
+            carry, caches_out = (x, total_aux), []
+            for r in range(repeats):
+                lp = jax.tree.map(lambda a: a[r], sp)
+                lc = (None if stage_cache is None
+                      else jax.tree.map(lambda a: a[r], stage_cache))
+                carry, nc = body(carry, (lp, lc))
+                caches_out.append(nc)
+            (x, total_aux) = carry
+            stage_new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *caches_out)
+                               if caches_out and caches_out[0] else None)
+        elif stage_cache is None:
+            (x, total_aux), stage_new_cache = jax.lax.scan(
+                lambda c, p_: body(c, (p_, None)), (x, total_aux), sp)
+        else:
+            (x, total_aux), stage_new_cache = jax.lax.scan(
+                body, (x, total_aux), (sp, stage_cache))
+        new_caches.append(stage_new_cache)
+    return x, new_caches, total_aux
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+def _embed_tokens(cfg: ModelConfig, params, tokens, policy):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return policy(x.astype(cfg.compute_dtype), "act")
+
+
+def _logits(cfg: ModelConfig, params, x, policy):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return policy(logits.astype(F32), "logits")
+
+
+def _assemble_input(cfg: ModelConfig, params, batch, policy):
+    """Token embeddings (+ modality prefix).  Returns (x, positions)."""
+    x = _embed_tokens(cfg, params, batch["tokens"], policy)
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate(
+            [batch["patches"].astype(x.dtype), x], axis=1)
+        x = policy(x, "act")
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def _run_encoder(cfg: ModelConfig, params, frames, policy):
+    x = frames.astype(cfg.compute_dtype)
+    x = x + L.sinusoid_pos(x.shape[1], cfg.d_model, dtype=x.dtype)
+    x = policy(x, "act")
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc = params["encoder"]
+    x, _, _ = _run_stages(cfg, enc["stages"], list(cfg.encoder_stages()), x,
+                          mode="train", positions=positions, policy=policy,
+                          causal=False)
+    return L.norm_apply(cfg, enc.get("final_norm", {}), x)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+def forward_train(cfg: ModelConfig, params, batch, policy=L.NULL_POLICY):
+    """Full-sequence teacher-forced forward. Returns (logits, aux)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(cfg, params, batch["frames"], policy)
+    x, positions = _assemble_input(cfg, params, batch, policy)
+    x, _, aux = _run_stages(cfg, params["stages"], list(cfg.stages()), x,
+                            mode="train", positions=positions, policy=policy,
+                            enc_out=enc_out)
+    x = L.norm_apply(cfg, params.get("final_norm", {}), x)
+    return _logits(cfg, params, x, policy), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, policy=L.NULL_POLICY):
+    logits, aux = forward_train(cfg, params, batch, policy)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        P = batch["patches"].shape[1]
+        logits = logits[:, P:]
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask_v = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask_v, logits, -jnp.inf)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(F32)
+    nll = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    total = nll + cfg.router_aux_weight * aux
+    return total, {"loss": nll, "aux_loss": aux, "tokens": mask.sum()}
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int):
+    """Zero cache pytree matching the stage structure."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    hd, KH = cfg.resolved_head_dim, cfg.padded_num_kv_heads
+
+    def layer_cache(kind):
+        c = {}
+        if kind in ATTN_KINDS:
+            if cfg.kv_quant == "int8":
+                c["attn"] = {
+                    "k": jnp.zeros((B, cache_len, KH, hd), jnp.int8),
+                    "v": jnp.zeros((B, cache_len, KH, hd), jnp.int8),
+                    "k_scale": jnp.zeros((B, cache_len, KH, 1),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((B, cache_len, KH, 1),
+                                         jnp.float32),
+                }
+            else:
+                c["attn"] = {"k": jnp.zeros((B, cache_len, KH, hd), dt),
+                             "v": jnp.zeros((B, cache_len, KH, hd), dt)}
+            if cfg.is_encoder_decoder:
+                c["xattn"] = {"k": jnp.zeros((B, cfg.encoder_seq, KH, hd), dt),
+                              "v": jnp.zeros((B, cfg.encoder_seq, KH, hd), dt)}
+        elif kind == "rec":
+            c["rec"] = L.init_rglru_cache(cfg, B, dt)
+        elif kind == "mamba":
+            c["mamba"] = L.init_mamba_cache(cfg, B, dt)
+        return c
+
+    caches = []
+    for pattern, repeats in cfg.stages():
+        one = {f"b{j}": layer_cache(k) for j, k in enumerate(pattern)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (repeats, *a.shape)).copy(), one))
+    return caches
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len: int,
+            policy=L.NULL_POLICY):
+    """Process the prompt; returns (last-token logits, cache, next_pos)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(cfg, params, batch["frames"], policy)
+    x, positions = _assemble_input(cfg, params, batch, policy)
+    x, caches, _ = _run_stages(cfg, params["stages"], list(cfg.stages()), x,
+                               mode="prefill", positions=positions,
+                               policy=policy, enc_out=enc_out,
+                               cache_len=cache_len)
+    x = L.norm_apply(cfg, params.get("final_norm", {}), x)
+    logits = _logits(cfg, params, x[:, -1:], policy)
+    return logits, caches, x.shape[1]
+
+
+def prefill_chunk(cfg: ModelConfig, params, tokens, cache, off,
+                  policy=L.NULL_POLICY):
+    """Chunked (Sarathi-style) prefill: extend the cache with C prompt
+    tokens.  tokens: (B, C) int32; off: scalar or (B,) tokens already
+    cached.  Returns (logits (B,C,V), new_cache).  Exact for every arch —
+    recurrent state and conv state carry across chunks."""
+    x = _embed_tokens(cfg, params, tokens, policy)
+    x, caches, _ = _run_stages(cfg, params["stages"], list(cfg.stages()), x,
+                               mode="extend", positions=None, pos=off,
+                               caches=cache, policy=policy)
+    x = L.norm_apply(cfg, params.get("final_norm", {}), x)
+    return _logits(cfg, params, x, policy), caches
+
+
+def encode_for_cache(cfg: ModelConfig, params, frames, B, cache_len,
+                     policy=L.NULL_POLICY):
+    """Enc-dec: run the encoder and produce a fresh cache pre-filled with
+    per-layer cross-attention K/V (decoder cache empty, pos=0)."""
+    cache = init_cache(cfg, B, cache_len)
+    enc_out = _run_encoder(cfg, params, frames, policy)
+    new_caches = []
+    for si, ((pattern, repeats), sp) in enumerate(
+            zip(list(cfg.stages()), params["stages"])):
+        def body(carry, inp, _pattern=pattern):
+            lp, lc = inp
+            for j, kind in enumerate(_pattern):
+                if kind in ATTN_KINDS:
+                    ek, ev = L.encode_cross_kv(cfg, lp[f"b{j}"]["xattn"],
+                                               enc_out, policy)
+                    lc[f"b{j}"]["xattn"] = {"k": ek, "v": ev}
+            return carry, lc
+        _, nc = jax.lax.scan(body, 0, (sp, cache[si]))
+        new_caches.append(nc)
+    return new_caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos,
+                policy=L.NULL_POLICY):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position of
+    this token.  Returns (logits (B,1,V), new_cache)."""
+    x = _embed_tokens(cfg, params, tokens, policy)
+    positions = None  # decode positions derived from ``pos`` inside layers
+    x, caches, _ = _run_stages(cfg, params["stages"], list(cfg.stages()), x,
+                               mode="decode", positions=positions, pos=pos,
+                               caches=cache, policy=policy)
+    x = L.norm_apply(cfg, params.get("final_norm", {}), x)
+    return _logits(cfg, params, x, policy), caches

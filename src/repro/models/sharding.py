@@ -1,0 +1,256 @@
+"""Sharding specifications for params, caches and activations.
+
+Layout (DESIGN.md §6):
+  * mesh axes: ("data", "model") single pod; ("pod", "data", "model") for
+    multi-pod.  Batch shards over DP = ("pod","data"); tensor-parallel dims
+    over "model".
+  * attention: Q heads sharded over model when divisible (configs pad the
+    head count, see ModelConfig.padded_num_heads); KV heads sharded only if
+    num_kv_heads % model_size == 0, else replicated (GQA with few KV heads).
+  * FFN: d_ff column/row parallel.  MoE: experts replicated in count,
+    per-expert d_ff tensor-parallel ("TP-within-expert") so dispatch stays
+    local to the data shard.
+  * vocab: embedding + head sharded over model (configs pad vocab).
+  * decode KV caches: sequence dimension sharded over model
+    (cross-chip flash-decode); batch over DP when it divides.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .config import ATTN_KINDS, ModelConfig
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _dp(mesh: Mesh, size: int):
+    """Batch axis spec: shard over DP only when it divides evenly."""
+    axes = dp_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if size % total == 0 else None
+
+
+class MeshPolicy:
+    """Activation-sharding policy bound to a mesh (see layers.NullPolicy)."""
+
+    def __init__(self, mesh: Mesh, cfg: ModelConfig, batch: int):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.msize = mesh.shape["model"]
+        self.dp = _dp(mesh, batch)
+        self.dp_size = 1
+        if self.dp is not None:
+            for a in self.dp:
+                self.dp_size *= mesh.shape[a]
+        h_ok = cfg.padded_num_heads % self.msize == 0
+        kv_ok = cfg.num_kv_heads % self.msize == 0
+        di_ok = (cfg.d_inner % self.msize == 0) if cfg.d_inner else False
+        specs = {
+            "act": P(self.dp, None, None),
+            "act_q": P(self.dp, None, "model" if h_ok else None, None),
+            "act_q_decode": P(self.dp, None, None, None),
+            "act_kv": P(self.dp, None, "model" if kv_ok else None, None),
+            "act_ff": P(self.dp, None, "model"),
+            "logits": P(self.dp, None, "model"),
+            "moe_gathered": P(self.dp, None, None, None),
+            "moe_hidden": P(self.dp, None, None, "model"),
+            "act_inner": P(self.dp, None, "model" if di_ok else None),
+            "act_inner2": P(self.dp, None, "model" if di_ok else None),
+            "ssm_conv": P(self.dp, None, "model" if di_ok else None),
+            "ssm_state": P(self.dp, "model" if di_ok else None),
+            # decode KV cache: sequence over model (flash-decode layout);
+            # when the batch cannot use the data axis (long_500k, B=1) the
+            # sequence dim absorbs it too.
+            "kv_cache": P(self.dp,
+                          ("data", "model") if self.dp is None else "model",
+                          None, None),
+        }
+        self.specs = specs
+
+    def __call__(self, x, name: str):
+        if (name in ("moe_gathered", "moe_hidden")
+                and self.cfg.moe_gathered_spec == "auto"):
+            return x                      # let GSPMD place dispatch tensors
+        spec = self.specs.get(name)
+        if spec is None:
+            return x
+        # ssm_state for mamba is (B, di, state): adjust rank
+        if name == "ssm_state" and x.ndim == 3:
+            spec = P(*spec, None)
+        if name == "ssm_conv" and x.ndim == 3:
+            pass
+        if len(spec) != x.ndim:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# parameter PartitionSpecs (mirror init_params structure)
+# --------------------------------------------------------------------------
+def _layer_specs(cfg: ModelConfig, kind: str, msize: int, cross: bool):
+    h_ok = cfg.padded_num_heads % msize == 0
+    kv_ok = cfg.num_kv_heads % msize == 0
+    di_ok = (cfg.d_inner % msize == 0) if cfg.d_inner else False
+    H = "model" if h_ok else None
+    KV = "model" if kv_ok else None
+    DI = "model" if di_ok else None
+
+    def norm_spec():
+        if cfg.norm == "rmsnorm":
+            return {"scale": P(None)}
+        if cfg.norm == "layernorm":
+            return {"scale": P(None), "bias": P(None)}
+        return {}
+
+    def attn_spec():
+        s = {"wq": P(None, H, None), "wk": P(None, KV, None),
+             "wv": P(None, KV, None), "wo": P(H, None, None)}
+        if cfg.qkv_bias and not cross:
+            s.update({"bq": P(H, None), "bk": P(KV, None), "bv": P(KV, None)})
+        if cfg.qk_norm:
+            s.update({"q_norm": P(None), "k_norm": P(None)})
+        return s
+
+    def xattn_spec():
+        return {"wq": P(None, H, None), "wk": P(None, KV, None),
+                "wv": P(None, KV, None), "wo": P(H, None, None)}
+
+    def ffn_spec():
+        s = {"w1": P(None, "model"), "w2": P("model", None)}
+        if cfg.glu:
+            s["w3"] = P(None, "model")
+        return s
+
+    p = {"ln1": norm_spec()}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn_spec()
+        if cross:
+            p["ln_x"] = norm_spec()
+            p["xattn"] = xattn_spec()
+        p["ln2"] = norm_spec()
+        if cfg.num_experts:
+            moe = {"router": P(None, None),
+                   "w1": P(None, None, "model"), "w2": P(None, "model", None)}
+            if cfg.glu:
+                moe["w3"] = P(None, None, "model")
+            if cfg.num_shared_experts:
+                moe["shared"] = ffn_spec()
+            p["moe"] = moe
+        else:
+            p["ffn"] = ffn_spec()
+    elif kind == "rec":
+        p["rec"] = {"w_x": P(None, DI), "w_gate": P(None, DI),
+                    "conv_w": P(None, DI), "conv_b": P(DI),
+                    "rg_a": P(DI, None, None), "rg_a_b": P(DI),
+                    "rg_x": P(DI, None, None), "rg_x_b": P(DI),
+                    "lam": P(DI), "out_proj": P(DI, None)}
+        p["ln2"] = norm_spec()
+        p["ffn"] = ffn_spec()
+    elif kind == "mamba":
+        p["mamba"] = {"in_proj": P(None, DI), "conv_w": P(None, DI),
+                      "conv_b": P(DI), "x_proj": P(DI, None),
+                      "dt_proj": P(None, DI), "dt_bias": P(DI),
+                      "A_log": P(DI, None), "D": P(DI),
+                      "out_proj": P(DI, None)}
+    return p
+
+
+def _prepend(spec_tree, axis_spec=None):
+    """Prepend a leading (stacked-repeats) dim to every PartitionSpec."""
+    return jax.tree.map(lambda s: P(axis_spec, *s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    msize = mesh.shape["model"]
+
+    def norm_spec():
+        if cfg.norm == "layernorm":
+            return {"scale": P(None), "bias": P(None)}
+        return {"scale": P(None)} if cfg.norm == "rmsnorm" else {}
+
+    specs = {
+        "embed": P("model", None),
+        "final_norm": norm_spec(),
+        "stages": [
+            _prepend({f"b{j}": _layer_specs(cfg, kind, msize,
+                                            cfg.is_encoder_decoder)
+                      for j, kind in enumerate(pat)})
+            for pat, reps in cfg.stages()
+        ],
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model")
+    if cfg.is_encoder_decoder:
+        specs["encoder"] = {
+            "stages": [
+                _prepend({f"b{j}": _layer_specs(cfg, kind, msize, False)
+                          for j, kind in enumerate(pat)})
+                for pat, reps in cfg.encoder_stages()
+            ],
+            "final_norm": norm_spec(),
+        }
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """PartitionSpecs matching init_cache structure (stacked leading dim)."""
+    dp = _dp(mesh, batch)
+    msize = mesh.shape["model"]
+    di_ok = (cfg.d_inner % msize == 0) if cfg.d_inner else False
+    DI = "model" if di_ok else None
+    seq_ax = ("data", "model") if dp is None else "model"
+
+    def layer_cache_spec(kind):
+        c = {}
+        if kind in ATTN_KINDS:
+            c["attn"] = {"k": P(None, dp, seq_ax, None, None),
+                         "v": P(None, dp, seq_ax, None, None)}
+            if cfg.kv_quant == "int8":
+                c["attn"]["k_scale"] = P(None, dp, seq_ax, None, None)
+                c["attn"]["v_scale"] = P(None, dp, seq_ax, None, None)
+            if cfg.is_encoder_decoder:
+                c["xattn"] = {"k": P(None, dp, None, None, None),
+                              "v": P(None, dp, None, None, None)}
+        elif kind == "rec":
+            c["rec"] = {"conv": P(None, dp, None, DI),
+                        "h": P(None, dp, DI)}
+        elif kind == "mamba":
+            c["mamba"] = {"conv": P(None, dp, None, DI),
+                          "ssm": P(None, dp, DI, None)}
+        return c
+
+    return [
+        {f"b{j}": layer_cache_spec(kind) for j, kind in enumerate(pat)}
+        for pat, reps in cfg.stages()
+    ]
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, kind: str):
+    """PartitionSpecs for the input batch dict."""
+    dp = _dp(mesh, batch)
+    specs = {"tokens": P(dp, None)}
+    if kind == "train":
+        specs["labels"] = P(dp, None)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = P(dp, None, None)
+    if cfg.frontend == "vision" and kind in ("train", "prefill"):
+        specs["patches"] = P(dp, None, None)
+    return specs
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,2 @@
+from .bm25 import BM25Index, tokenize
+from .vector import VectorIndex, cosine_topk

@@ -1,0 +1,71 @@
+"""Exact vector similarity search (paper Query 3 step 2 — the VSS scan).
+
+``cosine_topk`` is the jnp oracle for the ``topk_sim`` Pallas kernel: the
+corpus-side scan is a blocked matmul with a running top-k, sharded over the
+(data, model) mesh when a policy is supplied.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cosine_topk(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
+                block: int = 4096):
+    """corpus: (N, D) unit-normalised; queries: (Q, D).  Returns
+    (scores (Q,k), indices (Q,k)) by cosine similarity, blocked over N so the
+    full (N, Q) score matrix is never materialised."""
+    N, D = corpus.shape
+    Q = queries.shape[0]
+    qn = queries / jnp.maximum(
+        jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
+    block = min(block, N)
+    nblk = -(-N // block)
+    pad = nblk * block - N
+    c = jnp.pad(corpus, ((0, pad), (0, 0))) if pad else corpus
+    c = c.reshape(nblk, block, D)
+
+    def step(carry, inp):
+        best_s, best_i = carry                       # (Q, k)
+        blk_idx, cb = inp
+        s = jnp.einsum("qd,nd->qn", qn, cb,
+                       preferred_element_type=jnp.float32)
+        idx = blk_idx * block + jnp.arange(block)
+        s = jnp.where(idx[None, :] < N, s, -jnp.inf)
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i,
+                                 jnp.broadcast_to(idx, (Q, block))], axis=1)
+        top_s, top_pos = jax.lax.top_k(cat_s, k)
+        top_i = jnp.take_along_axis(cat_i, top_pos, axis=1)
+        return (top_s, top_i), None
+
+    init = (jnp.full((Q, k), -jnp.inf, jnp.float32),
+            jnp.zeros((Q, k), jnp.int32))
+    (s, i), _ = jax.lax.scan(step, init, (jnp.arange(nblk), c))
+    return s, i
+
+
+class VectorIndex:
+    """Materialised embedding index over a column of texts."""
+
+    def __init__(self, vectors: np.ndarray):
+        v = np.asarray(vectors, np.float32)
+        norms = np.maximum(np.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+        self.vectors = v / norms
+        self._topk = jax.jit(cosine_topk, static_argnames=("k", "block"))
+
+    @classmethod
+    def build(cls, ctx, model_spec, texts: Sequence[str]) -> "VectorIndex":
+        from repro.core.functions import llm_embedding
+        return cls(llm_embedding(ctx, model_spec, list(texts)))
+
+    def topk(self, query_vecs: np.ndarray, k: int = 100):
+        q = np.atleast_2d(np.asarray(query_vecs, np.float32))
+        use_pallas_k = min(k, len(self.vectors))
+        s, i = self._topk(jnp.asarray(self.vectors), jnp.asarray(q),
+                          use_pallas_k)
+        return np.asarray(s), np.asarray(i)

@@ -1,0 +1,78 @@
+"""Serving step functions: prefill / decode with greedy+temperature sampling.
+
+These are the units the dry-run lowers for the inference shape cells, and
+the units the continuous-batching engine (engine.py) drives at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import NULL_POLICY
+
+F32 = jnp.float32
+
+
+def _sample(cfg: ModelConfig, logits, rng, temperature):
+    """logits: (B, 1, V) fp32 -> tokens (B, 1) int32 (greedy if temp==0)."""
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -jnp.inf)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if rng is None:
+        return greedy
+    noisy = jax.random.categorical(rng, logits / jnp.maximum(temperature,
+                                                             1e-4))
+    use_greedy = temperature <= 0.0
+    return jnp.where(use_greedy, greedy, noisy.astype(jnp.int32))
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int, policy=NULL_POLICY):
+    cfg = cfg.replace(remat=False)      # no backward pass in serving
+
+    def prefill_step(params, batch):
+        logits, cache, pos = M.prefill(cfg, params, batch, cache_len, policy)
+        next_tok = _sample(cfg, logits, None, 0.0)
+        return {"logits": logits, "next_token": next_tok,
+                "cache": cache, "pos": jnp.int32(pos)}
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy=NULL_POLICY):
+    cfg = cfg.replace(remat=False)      # no backward pass in serving
+
+    def decode_step(params, tokens, cache, pos, rng=None, temperature=0.0):
+        logits, cache = M.decode_step(cfg, params, tokens, cache, pos, policy)
+        next_tok = _sample(cfg, logits, rng, temperature)
+        return {"logits": logits, "next_token": next_tok, "cache": cache}
+    return decode_step
+
+
+def make_embed_step(cfg: ModelConfig, policy=NULL_POLICY):
+    """Mean-pooled final hidden state as the text embedding (llm_embedding)."""
+    cfg = cfg.replace(remat=False)      # no backward pass in serving
+
+    def embed_step(params, batch):
+        # run the decoder stack in train (full-sequence) mode, no logits
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = M._run_encoder(cfg, params, batch["frames"], policy)
+        x, positions = M._assemble_input(cfg, params, batch, policy)
+        x, _, _ = M._run_stages(cfg, params["stages"], list(cfg.stages()), x,
+                                mode="train", positions=positions,
+                                policy=policy, enc_out=enc_out)
+        from repro.models import layers as L
+        x = L.norm_apply(cfg, params["final_norm"], x)
+        mask = (batch["tokens"] >= 0).astype(F32)
+        if cfg.frontend == "vision" and "patches" in batch:
+            P_ = batch["patches"].shape[1]
+            x = x[:, P_:]
+        emb = (x.astype(F32) * mask[..., None]).sum(1) / \
+            jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+        emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True),
+                                1e-9)
+        return emb
+    return embed_step

@@ -1,0 +1,2 @@
+from .optimizer import adamw_init, adamw_update, opt_specs, HParams
+from .train_step import make_train_step, make_eval_step

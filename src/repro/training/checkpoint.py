@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing: atomic, keep-N, resumable, reshardable.
+
+Production posture (DESIGN.md §6):
+  * ATOMIC: write to ``step_XXXX.tmp`` then ``rename`` — a node failure
+    mid-save never corrupts the latest checkpoint;
+  * KEEP-N: bounded disk, oldest checkpoints garbage-collected;
+  * RESUME: ``restore_latest`` scans the directory, so ``--resume auto``
+    after a crash continues from the newest complete checkpoint
+    (bitwise-identical continuation is asserted in the failure test);
+  * ELASTIC: arrays are saved as host numpy with their pytree structure;
+    on restore the trainer re-shards them for whatever mesh is active, so
+    the same checkpoint restarts on a different pod/slice count.
+
+Format: msgpack-free, dependency-light — one ``.npz`` per checkpoint with
+flattened key paths + a JSON manifest (step, config name, tree structure).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def normalize(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(re.fullmatch(r"\d+", k) for k in keys):
+            return [normalize(node[str(i)]) for i in range(len(keys))]
+        return {k: normalize(v) for k, v in node.items()}
+
+    return normalize(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+
+    # ---- save ---------------------------------------------------------------
+    def save(self, step: int, state: dict, metadata: Optional[dict] = None):
+        """state: arbitrary pytree of arrays (params/opt/data-state)."""
+        host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state)
+        if self.async_save:
+            self.wait()
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host, metadata or {}))
+            self._pending.start()
+        else:
+            self._write(step, host, metadata or {})
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_state, metadata: dict):
+        flat = _flatten(host_state)
+        # numpy can't serialise bfloat16 — store a uint16 view + dtype tag
+        dtypes = {}
+        enc = {}
+        for k, v in flat.items():
+            v = np.asarray(v)
+            if v.dtype.kind == "V" or str(v.dtype) == "bfloat16":
+                dtypes[k] = "bfloat16"
+                v = v.view(np.uint16)
+            enc[k] = v
+        tmp = self.dir / f"step_{step:010d}.tmp.npz"
+        final = self.dir / f"step_{step:010d}.npz"
+        np.savez(tmp, __dtypes__=np.frombuffer(
+            json.dumps(dtypes).encode(), np.uint8), **enc)
+        manifest = {"step": step, "time": time.time(), **metadata}
+        (self.dir / f"step_{step:010d}.json").write_text(
+            json.dumps(manifest))
+        tmp.replace(final)                      # atomic publish
+        self._gc()
+
+    def _gc(self):
+        ckpts = self.list_steps()
+        for step in ckpts[:-self.keep] if self.keep else []:
+            for suffix in (".npz", ".json"):
+                p = self.dir / f"step_{step:010d}{suffix}"
+                if p.exists():
+                    p.unlink()
+
+    # ---- restore -------------------------------------------------------------
+    def list_steps(self):
+        steps = []
+        for p in self.dir.glob("step_*.npz"):
+            m = re.fullmatch(r"step_(\d+)\.npz", p.name)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def restore(self, step: int) -> dict:
+        import ml_dtypes
+        path = self.dir / f"step_{step:010d}.npz"
+        with np.load(path, allow_pickle=False) as z:
+            flat = {k: z[k] for k in z.files}
+        dtypes = {}
+        if "__dtypes__" in flat:
+            dtypes = json.loads(flat.pop("__dtypes__").tobytes().decode())
+        for k, dt in dtypes.items():
+            flat[k] = flat[k].view(ml_dtypes.bfloat16)
+        return _unflatten(flat)
+
+    def restore_latest(self) -> Optional[dict]:
+        steps = self.list_steps()
+        return self.restore(steps[-1]) if steps else None
+
+    def latest_step(self) -> int:
+        steps = self.list_steps()
+        return steps[-1] if steps else -1
+
+    def metadata(self, step: int) -> dict:
+        p = self.dir / f"step_{step:010d}.json"
+        return json.loads(p.read_text()) if p.exists() else {}

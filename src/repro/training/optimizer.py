@@ -1,0 +1,111 @@
+"""AdamW with fp32 master weights and ZeRO-1-style sharded optimizer state.
+
+Live params stay in ``param_dtype`` (bf16); the optimizer state carries a
+fp32 master copy plus first/second moments.  State shardings add a "data"
+axis on the first evenly-divisible replicated dim of each tensor, so the
+12 bytes/param optimizer footprint is spread over the *whole* mesh rather
+than just the model axis (ZeRO-1).  GSPMD materialises the implied
+reduce-scatter (grads -> sharded moments) and all-gather (master -> bf16
+params) from the in/out shardings alone.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class HParams:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    accum_steps: int = 1             # gradient-accumulation microbatches
+
+
+def lr_schedule(hp: HParams, step):
+    step = step.astype(F32)
+    warm = step / jnp.maximum(hp.warmup_steps, 1)
+    prog = jnp.clip((step - hp.warmup_steps)
+                    / jnp.maximum(hp.total_steps - hp.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return hp.lr * jnp.minimum(warm, 1.0) * jnp.maximum(cos, 0.1)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(lambda p: p.astype(F32), params),
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, hp: HParams):
+    step = state["step"] + 1
+    lr = lr_schedule(hp, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.grad_clip / (gnorm + 1e-9))
+    bc1 = 1 - hp.b1 ** step.astype(F32)
+    bc2 = 1 - hp.b2 ** step.astype(F32)
+
+    def upd(g, m, v, master):
+        g = g.astype(F32) * scale
+        m = hp.b1 * m + (1 - hp.b1) * g
+        v = hp.b2 * v + (1 - hp.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + hp.eps)
+        master = master - lr * (u + hp.weight_decay * master)
+        return m, v, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, ma)
+           for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "master": new_master, "m": new_m,
+                 "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _zero1_spec(spec: P, shape, data_size: int) -> P:
+    """Add 'data' on the first replicated dim that divides evenly."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (s, n) in enumerate(zip(entries, shape)):
+        if s is None and n % data_size == 0 and n >= data_size:
+            entries[i] = "data"
+            break
+    return P(*entries)
+
+
+def opt_specs(param_spec_tree, param_shapes, mesh):
+    """Optimizer-state PartitionSpecs (ZeRO-1 over the 'data' axis)."""
+    data_size = mesh.shape["data"]
+
+    def one(spec, shape_struct):
+        return _zero1_spec(spec, shape_struct.shape, data_size)
+
+    sharded = jax.tree.map(one, param_spec_tree, param_shapes,
+                           is_leaf=lambda s: isinstance(s, P))
+    return {"step": P(), "master": sharded, "m": sharded, "v": sharded}

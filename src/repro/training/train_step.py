@@ -1,0 +1,75 @@
+"""jit-able train / eval steps with optional gradient accumulation."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import NULL_POLICY
+
+from .optimizer import HParams, adamw_update
+
+F32 = jnp.float32
+
+
+def make_train_step(cfg: ModelConfig, hp: HParams, policy=NULL_POLICY):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With hp.accum_steps > 1 the global batch is split along the batch dim
+    into microbatches scanned sequentially (grad accumulation) — the
+    distributed-optimization lever for fitting large global batches.
+    """
+
+    def loss(params, batch):
+        return M.loss_fn(cfg, params, batch, policy)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if hp.accum_steps > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, aux), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), aux
+
+            micro_batches = jax.tree.map(
+                lambda a: a.reshape(hp.accum_steps,
+                                    a.shape[0] // hp.accum_steps,
+                                    *a.shape[1:]),
+                batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            if cfg.unroll_inner:
+                # cost-probe lowering: python loop so XLA's cost model
+                # (which counts while bodies once) sees every microbatch
+                carry = (zeros, jnp.zeros((), F32))
+                aux = None
+                for i in range(hp.accum_steps):
+                    mb = jax.tree.map(lambda a, i=i: a[i], micro_batches)
+                    carry, aux = micro(carry, mb)
+                (grads, l_sum) = carry
+            else:
+                (grads, l_sum), auxs = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), F32)), micro_batches)
+                aux = jax.tree.map(lambda a: a[-1], auxs)
+            grads = jax.tree.map(lambda g: g / hp.accum_steps, grads)
+            lval = l_sum / hp.accum_steps
+        else:
+            (lval, aux), grads = grad_fn(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, hp)
+        metrics = {"total_loss": lval, **aux, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, policy=NULL_POLICY):
+    def eval_step(params, batch):
+        _, metrics = M.loss_fn(cfg, params, batch, policy)
+        return metrics
+    return eval_step

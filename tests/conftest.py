@@ -1,0 +1,15 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device — the 512-device override is
+# dryrun.py-only (see system design notes).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

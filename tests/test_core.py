@@ -1,0 +1,113 @@
+"""Unit tests: meta-prompt, provider protocol, rerank, catalog persistence."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (Catalog, ContextOverflowError, MockProvider,
+                        SemanticContext, build_metaprompt, llm_complete,
+                        llm_embedding, llm_filter, llm_first, llm_last,
+                        llm_reduce, llm_reduce_json, llm_rerank,
+                        reset_global_catalog)
+from repro.core.fusion import fusion
+from repro.core.resources import ModelResource
+
+
+def test_metaprompt_prefix_stable_across_batches():
+    """The static prefix must be byte-identical across calls (KV reuse)."""
+    t1 = [{"a": "x"}]
+    t2 = [{"a": "y"}, {"a": "z"}]
+    m1 = build_metaprompt("filter", "is relevant?", t1)
+    m2 = build_metaprompt("filter", "is relevant?", t2)
+    assert m1.prefix == m2.prefix
+    assert m1.suffix != m2.suffix
+
+
+@pytest.mark.parametrize("fmt", ["xml", "json", "markdown"])
+def test_metaprompt_serializations(fmt):
+    mp = build_metaprompt("complete", "task", [{"a": 1, "b": "two"}], fmt)
+    assert "task" in mp.prefix
+    assert "two" in mp.suffix
+
+
+def test_provider_context_overflow():
+    p = MockProvider()
+    model = ModelResource(name="m", version=1, arch="mock",
+                          context_window=10, max_output_tokens=5)
+    mp = build_metaprompt("complete", "x" * 500, [{"a": "b"}])
+    with pytest.raises(ContextOverflowError):
+        p.complete(model, mp, 1)
+
+
+def test_filter_returns_booleans():
+    ctx = SemanticContext()
+    out = llm_filter(ctx, {"model": "m"}, {"prompt": "p"},
+                     [{"v": i} for i in range(10)])
+    assert all(isinstance(b, bool) for b in out)
+
+
+def test_reduce_and_json():
+    ctx = SemanticContext()
+    rows = [{"v": i} for i in range(5)]
+    s = llm_reduce(ctx, {"model": "m"}, {"prompt": "summarize"}, rows)
+    assert isinstance(s, str)
+    j = llm_reduce_json(ctx, {"model": "m"}, {"prompt": "summarize"}, rows)
+    assert isinstance(j, dict)
+
+
+def test_rerank_first_last_consistent():
+    ctx = SemanticContext()
+    rows = [{"doc": f"d{i}"} for i in range(7)]
+    perm = llm_rerank(ctx, {"model": "m"}, {"prompt": "relevance"}, rows)
+    assert sorted(perm) == list(range(7))
+    assert llm_first(ctx, {"model": "m"}, {"prompt": "relevance"}, rows) \
+        == rows[perm[0]]
+    assert llm_last(ctx, {"model": "m"}, {"prompt": "relevance"}, rows) \
+        == rows[perm[-1]]
+
+
+def test_rerank_windowed_over_long_lists():
+    ctx = SemanticContext()
+    rows = [{"doc": f"d{i}"} for i in range(37)]
+    perm = llm_rerank(ctx, {"model": "m"}, {"prompt": "q"}, rows,
+                      window=10, stride=5)
+    assert sorted(perm) == list(range(37))
+
+
+def test_embedding_shape_and_dedup():
+    ctx = SemanticContext()
+    texts = ["a", "b", "a", "c", "b"]
+    e = llm_embedding(ctx, {"model": "e", "embedding_dim": 16}, texts)
+    assert e.shape == (5, 16)
+    np.testing.assert_allclose(e[0], e[2])
+    assert ctx.reports[-1].n_unique == 3
+
+
+def test_catalog_persistence(tmp_path):
+    path = tmp_path / "catalog.json"
+    c1 = Catalog(str(path))
+    c1.create_model("m", arch="olmo-1b", context_window=123)
+    c1.create_prompt("p", "text-v1")
+    c1.update_prompt("p", "text-v2")
+    c2 = Catalog(str(path))
+    assert c2.get_model("m").context_window == 123
+    assert c2.get_prompt("p").text == "text-v2"
+    assert c2.get_prompt("p@1").text == "text-v1"
+
+
+def test_fusion_dispatch_unknown():
+    with pytest.raises(ValueError):
+        fusion("nope", np.ones(3))
+
+
+def test_null_on_single_tuple_overflow():
+    """Paper semantics: a single tuple exceeding the window -> NULL."""
+    ctx = SemanticContext()
+    rows = [{"v": "x" * 10_000}, {"v": "small"}]
+    out = llm_complete(ctx, {"model": "m", "context_window": 512,
+                             "max_output_tokens": 16},
+                       {"prompt": "p"}, rows)
+    assert out[0] is None
+    assert out[1] is not None
+    assert ctx.reports[-1].nulls == 1

@@ -1,0 +1,61 @@
+"""Validate the dry-run's scan-cost probe methodology.
+
+XLA counts while-loop bodies once (the motivating observation, re-verified
+here), and the probe decomposition  cost(base) + sum_i (R_i-1)*body_i
+must agree with a fully-unrolled lowering of the same model.
+
+Runs in a subprocess because the 8-device host platform flag must be set
+before jax initialises.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    sys.path.insert(0, "src")
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models.config import ShapeCell
+    from repro.launch import dryrun as D
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_smoke_config("gemma3-12b").replace(
+        num_layers=12, shard_multiple=4)
+    cell = ShapeCell("t", 32, 4, "train")
+
+    probed = D.probed_costs(cfg, cell, mesh)
+
+    unrolled_cfg = cfg.replace(unroll_layers=True, unroll_inner=True)
+    truth = D.lower_and_analyze(unrolled_cfg, cell, mesh, want_memory=False)
+
+    scanned = D.lower_and_analyze(cfg, cell, mesh, want_memory=False)
+
+    print(json.dumps({
+        "probed_flops": probed["flops_per_dev"],
+        "true_flops": truth["flops_per_dev"],
+        "scanned_flops": scanned["flops_per_dev"],
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_probe_decomposition_matches_unrolled():
+    out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.path.join(
+        os.path.dirname(__file__), ".."), capture_output=True, text=True,
+        timeout=1200)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    # probe accounting within 2% of ground truth
+    assert abs(rec["probed_flops"] - rec["true_flops"]) \
+        / rec["true_flops"] < 0.02, rec
+    # and the scanned program indeed under-counts (the motivating bug)
+    assert rec["scanned_flops"] < 0.6 * rec["true_flops"], rec

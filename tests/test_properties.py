@@ -1,0 +1,180 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (MockProvider, PredictionCache, SemanticContext,
+                        combanz, combmed, combmnz, combsum, llm_complete,
+                        plan_batches, rrf, run_adaptive)
+from repro.core.batching import ContextOverflowError
+from repro.core.metaprompt import serialize_tuple
+from repro.retrieval import BM25Index
+
+SMALL = settings(max_examples=40, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# adaptive batching invariants
+# --------------------------------------------------------------------------
+@SMALL
+@given(costs=st.lists(st.integers(1, 300), min_size=1, max_size=100),
+       ctx_window=st.integers(50, 2000),
+       out_tokens=st.integers(1, 50))
+def test_batch_plan_partition(costs, ctx_window, out_tokens):
+    """Every tuple lands in exactly one batch, order-preserving."""
+    plan = plan_batches(costs, prefix_tokens=10, context_window=ctx_window,
+                        max_output_tokens=out_tokens)
+    flat = [i for b in plan.batches for i in b]
+    assert flat == list(range(len(costs)))
+    # no batch except singletons exceeds the budget
+    budget = ctx_window - 10
+    for b in plan.batches:
+        if len(b) > 1:
+            assert sum(costs[i] + out_tokens for i in b) <= budget
+
+
+@SMALL
+@given(n=st.integers(1, 60), cap=st.integers(1, 400))
+def test_adaptive_backoff_terminates_and_covers(n, cap):
+    """Provider rejects batches over ``cap`` tokens; the 10% backoff must
+    still assign a result (or NULL) to every tuple."""
+    costs = [13] * n
+
+    def call(batch):
+        if len(batch) * 20 > cap:
+            raise ContextOverflowError("too big")
+        return [f"v{i}" for i in batch]
+
+    results, stats = run_adaptive(list(range(n)), costs, prefix_tokens=0,
+                                  context_window=10_000,
+                                  max_output_tokens=7, call=call)
+    if 20 > cap:
+        assert all(r is None for r in results)
+        assert stats.nulls == n
+    else:
+        assert all(r is not None for r in results)
+
+
+# --------------------------------------------------------------------------
+# dedup + cache semantics
+# --------------------------------------------------------------------------
+@SMALL
+@given(vals=st.lists(st.sampled_from(["a", "b", "c", "d"]), min_size=1,
+                     max_size=40))
+def test_dedup_equals_no_dedup(vals):
+    tuples = [{"v": v} for v in vals]
+    model = {"model": "m", "context_window": 100_000,
+             "max_output_tokens": 4}
+    prompt = {"prompt": "classify"}
+    ctx1 = SemanticContext(enable_dedup=True)
+    ctx2 = SemanticContext(enable_dedup=False, enable_cache=False)
+    r1 = llm_complete(ctx1, model, prompt, tuples)
+    r2 = llm_complete(ctx2, model, prompt, tuples)
+    assert r1 == r2
+    assert ctx1.reports[-1].n_unique == len(set(vals))
+
+
+@SMALL
+@given(vals=st.lists(st.text(alphabet="xyz", min_size=1, max_size=4),
+                     min_size=1, max_size=20))
+def test_cache_hit_equals_recompute(vals):
+    tuples = [{"v": v} for v in vals]
+    model = {"model": "m", "context_window": 100_000,
+             "max_output_tokens": 4}
+    prompt = {"prompt": "classify"}
+    ctx = SemanticContext()
+    first = llm_complete(ctx, model, prompt, tuples)
+    calls_before = ctx.provider.stats.calls
+    second = llm_complete(ctx, model, prompt, tuples)
+    assert second == first
+    assert ctx.provider.stats.calls == calls_before     # all hits, no calls
+
+
+def test_cache_lru_eviction():
+    c = PredictionCache(capacity=3)
+    for i in range(5):
+        c.put(f"k{i}", i)
+    assert c.get("k0") == (False, None)
+    assert c.get("k4") == (True, 4)
+
+
+# --------------------------------------------------------------------------
+# fusion properties
+# --------------------------------------------------------------------------
+scores = st.lists(st.floats(0, 10, allow_nan=False), min_size=2,
+                  max_size=30)
+
+
+@SMALL
+@given(s=scores)
+def test_fusion_permutation_consistency(s):
+    """Fusing a column with itself preserves the ranking order."""
+    a = np.asarray(s)
+    for fn in (combsum, combmnz, combanz, combmed):
+        f = fn(a, a)
+        assert np.all(np.argsort(-f, kind="stable")
+                      == np.argsort(-fn(a, a), kind="stable"))
+
+
+@SMALL
+@given(s=scores)
+def test_rrf_rank_monotonic(s):
+    """Higher single-retriever score can never lower the RRF score."""
+    a = np.asarray(s)
+    f = rrf(a)
+    order = np.argsort(-a, kind="stable")
+    fo = f[order]
+    assert np.all(np.diff(fo) <= 1e-12)
+
+
+@SMALL
+@given(s=scores)
+def test_combsum_commutative(s):
+    a = np.asarray(s)
+    b = a[::-1].copy()
+    assert np.allclose(combsum(a, b), combsum(b, a))
+
+
+# --------------------------------------------------------------------------
+# BM25 properties
+# --------------------------------------------------------------------------
+docs_strategy = st.lists(
+    st.lists(st.sampled_from("apple banana cherry join query".split()),
+             min_size=1, max_size=12).map(" ".join),
+    min_size=1, max_size=15)
+
+
+@SMALL
+@given(docs=docs_strategy)
+def test_bm25_nonnegative_and_zero_without_overlap(docs):
+    idx = BM25Index.build(docs)
+    s = idx.score("join query")
+    assert (s >= 0).all()
+    s2 = idx.score("zebra")
+    assert np.allclose(s2, 0.0)
+
+
+@SMALL
+@given(docs=docs_strategy)
+def test_bm25_tf_monotonic(docs):
+    """A doc containing the query term scores >= one that doesn't,
+    all else equal (same length)."""
+    docs = list(docs) + ["join join join", "apple apple apple"]
+    idx = BM25Index.build(docs)
+    s = idx.score("join")
+    assert s[len(docs) - 2] > s[len(docs) - 1]
+
+
+# --------------------------------------------------------------------------
+# serialization determinism (cache-key stability)
+# --------------------------------------------------------------------------
+@SMALL
+@given(d=st.dictionaries(st.sampled_from(["a", "b", "c"]),
+                         st.text(max_size=8), min_size=1, max_size=3),
+       fmt=st.sampled_from(["xml", "json", "markdown"]))
+def test_serialization_deterministic(d, fmt):
+    assert serialize_tuple(d, fmt) == serialize_tuple(dict(d), fmt)

@@ -1,0 +1,112 @@
+"""End-to-end behaviour tests: the paper's Queries 1-3 as library calls."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Catalog, MockProvider, SemanticContext,
+                        llm_embedding, llm_filter, llm_rerank,
+                        reset_global_catalog, rrf)
+from repro.engine import Pipeline, Table, ask
+from repro.retrieval import BM25Index, VectorIndex
+
+
+@pytest.fixture
+def ctx():
+    reset_global_catalog()
+    c = SemanticContext()
+    c.catalog.create_model("model-relevance-check", arch="mock",
+                           scope="global")
+    c.catalog.create_prompt("joins-prompt",
+                            "is related to join algos given abstract")
+    return c
+
+
+@pytest.fixture
+def papers():
+    return Table({
+        "id": list(range(6)),
+        "title": ["Hash joins", "Sort-merge joins", "B-trees",
+                  "Cyclic joins", "Vector DBs", "Hash joins"],
+        "abstract": ["hash join algo", "merge join algo", "index struct",
+                     "cyclic join queries wcoj", "ann search",
+                     "hash join algo"],
+    })
+
+
+def test_query2_pipeline(ctx, papers):
+    """Paper Query 2: filter -> summarize -> extract JSON, with chaining."""
+    pipe = (Pipeline(ctx, papers, "research_papers")
+            .llm_filter({"model_name": "model-relevance-check"},
+                        {"prompt_name": "joins-prompt"},
+                        ["title", "abstract"])
+            .llm_complete("summary", {"model": "gpt-4o"},
+                          {"prompt": "Summarize the abstract in 1 sentence"},
+                          ["abstract"])
+            .llm_complete_json("meta", {"model": "gpt-4o"},
+                               {"prompt": "extract keywords"},
+                               ["title", "abstract"]))
+    out = pipe.collect()
+    assert set(out.column_names) >= {"id", "title", "summary", "meta"}
+    assert all(isinstance(m, dict) for m in out.column("meta"))
+    plan = pipe.explain()
+    assert "llm_filter" in plan and "batch_sizes" in plan
+
+
+def test_query2_dedup_batching_visible(ctx, papers):
+    pipe = Pipeline(ctx, papers, "p").llm_filter(
+        {"model_name": "model-relevance-check"},
+        {"prompt_name": "joins-prompt"}, ["title", "abstract"])
+    pipe.collect()
+    rep = ctx.reports[-1]
+    assert rep.n_tuples == 6
+    assert rep.n_unique == 5           # duplicate row predicted once
+    assert rep.requests == 1           # batched into a single request
+
+
+def test_query3_hybrid_search(ctx, papers):
+    """Paper Query 3: embedding scan + BM25 + fusion + LLM rerank."""
+    docs = papers.column("abstract")
+    emb_model = {"model": "text-embedding-3-small", "embedding_dim": 64}
+    bm = BM25Index.build(docs)
+    b_idx, b_s = bm.topk("join algorithms in databases", 5)
+    vi = VectorIndex(llm_embedding(ctx, emb_model, docs))
+    q = llm_embedding(ctx, emb_model, ["join algorithms in databases"])
+    v_s, v_idx = vi.topk(q, 5)
+
+    full_b = np.full(len(docs), np.nan)
+    full_b[b_idx] = b_s / max(b_s.max(), 1e-9)
+    full_v = np.full(len(docs), np.nan)
+    full_v[v_idx[0]] = v_s[0] / max(v_s[0].max(), 1e-9)
+    fused = rrf(full_b, full_v)
+    assert fused.shape == (len(docs),)
+    order = np.argsort(-fused)
+
+    top = [docs[i] for i in order[:4]]
+    perm = llm_rerank(ctx, {"model": "gpt-4o"},
+                      {"prompt": "mentions cyclic joins"},
+                      [{"doc": d} for d in top])
+    assert sorted(perm) == list(range(4))
+
+
+def test_ask_demo(ctx, papers):
+    sql, pipe = ask(ctx, papers,
+                    "list reviews mentioning technical issues and assign a "
+                    "severity score to each issue")
+    assert "llm_filter" in sql
+    out = pipe.collect()
+    assert "assessment" in out.column_names
+
+
+def test_resource_versioning(ctx):
+    m1 = ctx.catalog.get_model("model-relevance-check")
+    ctx.catalog.update_model("model-relevance-check", context_window=9999)
+    m2 = ctx.catalog.get_model("model-relevance-check")
+    assert m2.version == m1.version + 1
+    assert m2.context_window == 9999
+    # previous version stays addressable
+    old = ctx.catalog.get_model(f"model-relevance-check@{m1.version}")
+    assert old.context_window == m1.context_window
+    # local shadows global
+    ctx.catalog.create_model("model-relevance-check", arch="olmo-1b",
+                             scope="local")
+    assert ctx.catalog.get_model("model-relevance-check").arch == "olmo-1b"
