@@ -106,6 +106,58 @@ def bench_batching_embedding():
     return times[False] / times[True]
 
 
+def bench_optimizer():
+    """Cost-based plan rewriting (pushdown + fusion): naive vs optimized
+    request/token counts on a 1k-row filter+complete+limit workload."""
+    from repro.core import MockProvider, SemanticContext
+    from repro.engine import Pipeline, Table
+
+    n = 1000
+    table = Table({
+        "id": list(range(n)),
+        "text": [f"review {i} about {'joins' if i % 4 else 'indexes'} "
+                 f"with a reasonably long body of text" for i in range(n)],
+        "year": [2000 + i % 25 for i in range(n)],
+    })
+    model = {"model": "m", "context_window": 4096, "max_output_tokens": 8}
+
+    def make(ctx):
+        return (Pipeline(ctx, table, "reviews")
+                .llm_filter(model, {"prompt": "is about joins"}, ["text"])
+                .llm_complete("summary", model, {"prompt": "summarize"},
+                              ["text"])
+                .llm_complete_json("meta", model, {"prompt": "extract"},
+                                   ["text"])
+                .order_by("year", desc=True)
+                .limit(10))
+
+    stats = {}
+    for optimize in (False, True):
+        ctx = SemanticContext(provider=MockProvider(), enable_cache=False,
+                              enable_dedup=False)
+        pipe = make(ctx)
+        t0 = time.perf_counter()
+        pipe.collect(optimize=optimize)
+        dt = time.perf_counter() - t0
+        est = (pipe._plan().optimized_cost if optimize
+               else pipe._plan().naive_cost)
+        stats[optimize] = (ctx.provider.stats.calls,
+                           ctx.provider.stats.prompt_tokens, est, dt)
+    req_n, tok_n, est_n, dt_n = stats[False]
+    req_o, tok_o, est_o, dt_o = stats[True]
+    _row("optimizer_naive", dt_n * 1e6 / n,
+         f"requests={req_n} prompt_tokens={tok_n} est[{est_n}]")
+    _row("optimizer_optimized", dt_o * 1e6 / n,
+         f"requests={req_o} prompt_tokens={tok_o} est[{est_o}]")
+    assert req_o < req_n and tok_o < tok_n, \
+        "optimized plan must issue strictly fewer requests and tokens"
+    assert est_o.requests < est_n.requests
+    assert est_o.tokens < est_n.tokens
+    _row("optimizer_reduction", 0.0,
+         f"requests={req_n/max(req_o,1):.1f}x tokens={tok_n/max(tok_o,1):.1f}x")
+    return req_n / max(req_o, 1)
+
+
 def bench_caching():
     from repro.core import MockProvider, SemanticContext, llm_complete
     rows = [{"r": f"text {i}"} for i in range(100)]
@@ -250,6 +302,7 @@ def bench_kernels():
 def main() -> None:
     print("name,us_per_call,derived")
     bench_batching_chat_api()
+    bench_optimizer()
     bench_caching()
     bench_dedup()
     bench_fusion_methods()

@@ -62,6 +62,27 @@ def main():
     print()
     print("prediction cache:", ctx.cache.stats)
 
+    # -- The plan optimizer at work -----------------------------------------
+    # Chained as written, the summarize pass would run over every row and
+    # only then keep the newest 3; the optimizer pushes order_by+limit
+    # below the LLM op and fuses same-model adjacent semantic ops, so the
+    # provider sees 3 tuples instead of 8.  collect(optimize=False) is the
+    # escape hatch that runs the plan exactly as chained.
+    demo_ctx = SemanticContext(enable_cache=False)   # isolate call counts
+    wasteful = (Pipeline(demo_ctx, research_papers, "research_papers")
+                .llm_complete("tldr", {"model": "gpt-4o"},
+                              {"prompt": "one-line tl;dr"}, ["abstract"])
+                .order_by("id", desc=True)
+                .limit(3))
+    print("\n--- optimizer demo: llm_complete -> order_by -> limit ---")
+    print(wasteful.explain())
+    wasteful.collect()
+    opt_tuples = demo_ctx.reports[-1].n_tuples
+    wasteful.collect(optimize=False)
+    naive_tuples = demo_ctx.reports[-1].n_tuples
+    print(f"tuples sent to the model: optimized run -> {opt_tuples}, "
+          f"naive run -> {naive_tuples}")
+
     # resource independence: swap the model, query stays identical
     ctx.catalog.update_model("model-relevance-check", context_window=2048)
     print("\nmodel updated to v2 — same pipeline, no query change:")

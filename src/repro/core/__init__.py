@@ -12,10 +12,10 @@ from .fusion import (FUSION_METHODS, combanz, combmed, combmnz, combsum,
                      fusion, max_normalize, rrf)
 from .functions import (ExecutionReport, SemanticContext, llm_complete,
                         llm_complete_json, llm_embedding, llm_filter,
-                        llm_first, llm_last, llm_reduce, llm_reduce_json,
-                        llm_rerank)
-from .metaprompt import (MetaPrompt, build_metaprompt, build_prefix,
-                         serialize_batch, serialize_tuple)
+                        llm_first, llm_last, llm_multi, llm_reduce,
+                        llm_reduce_json, llm_rerank)
+from .metaprompt import (MetaPrompt, build_metaprompt, build_multi_task,
+                         build_prefix, serialize_batch, serialize_tuple)
 from .provider import (BaseProvider, LocalJaxProvider, MockProvider,
                        estimate_tokens)
 from .resources import (Catalog, ModelResource, PromptResource,

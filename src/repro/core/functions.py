@@ -23,7 +23,8 @@ import numpy as np
 
 from .batching import run_adaptive
 from .cache import PredictionCache, cache_key
-from .metaprompt import build_metaprompt, build_prefix, serialize_tuple
+from .metaprompt import (build_metaprompt, build_multi_task, build_prefix,
+                         serialize_tuple)
 from .provider import BaseProvider, MockProvider, estimate_tokens
 from .resources import Catalog, ModelResource
 
@@ -42,6 +43,7 @@ class ExecutionReport:
     serialization: str = "xml"
     meta_prompt_prefix: str = ""
     chosen_batch_size: str = "auto"
+    selectivity: Optional[float] = None   # filter calls: pass rate
 
 
 class SemanticContext:
@@ -62,6 +64,24 @@ class SemanticContext:
         self.enable_batching = enable_batching
         self.max_batch = max_batch
         self.reports: List[ExecutionReport] = []
+        # per-prompt filter pass-rate observations: prompt_id -> [passed,
+        # total].  Feeds the plan optimizer's cost-ordered filter chains.
+        self.selectivity_stats: Dict[str, List[int]] = {}
+
+    # ---- selectivity bookkeeping (filter reordering) -----------------------
+    def record_selectivity(self, prompt_id: str, passed: int, total: int):
+        if total <= 0:
+            return
+        s = self.selectivity_stats.setdefault(prompt_id, [0, 0])
+        s[0] += passed
+        s[1] += total
+
+    def expected_selectivity(self, prompt_id: str,
+                             default: float = 0.5) -> float:
+        s = self.selectivity_stats.get(prompt_id)
+        if not s or s[1] == 0:
+            return default
+        return s[0] / s[1]
 
     # ---- resource resolution (name ref or inline spec) --------------------
     def resolve_model(self, spec: Dict[str, Any]) -> ModelResource:
@@ -107,6 +127,12 @@ def _map_function(ctx: SemanticContext, kind: str, model_spec, prompt_spec,
                   tuples: Sequence[dict]) -> List[Optional[str]]:
     model = ctx.resolve_model(model_spec)
     prompt_text, prompt_id = ctx.resolve_prompt(prompt_spec)
+    return _map_core(ctx, kind, model, prompt_text, prompt_id, tuples)
+
+
+def _map_core(ctx: SemanticContext, kind: str, model: ModelResource,
+              prompt_text: str, prompt_id: str,
+              tuples: Sequence[dict]) -> List[Optional[str]]:
     rep = ExecutionReport(function=kind, n_tuples=len(tuples),
                           serialization=ctx.serialization)
     ctx.reports.append(rep)
@@ -202,8 +228,78 @@ _TRUE = {"true", "yes", "1"}
 
 def llm_filter(ctx, model_spec, prompt_spec, tuples) -> List[bool]:
     raw = _map_function(ctx, "filter", model_spec, prompt_spec, tuples)
-    return [str(r).strip().lower() in _TRUE if r is not None else False
+    mask = [str(r).strip().lower() in _TRUE if r is not None else False
             for r in raw]
+    _, prompt_id = ctx.resolve_prompt(prompt_spec)
+    ctx.record_selectivity(prompt_id, sum(mask), len(mask))
+    if ctx.reports:
+        ctx.reports[-1].selectivity = (sum(mask) / len(mask)
+                                       if mask else None)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# fused multi-output pass (the plan optimizer's semantic-fusion rule)
+# ---------------------------------------------------------------------------
+MULTI_KINDS = ("filter", "complete", "complete_json")
+
+
+def _decode_multi_value(kind: str, val) -> Any:
+    if kind == "filter":
+        if isinstance(val, bool):
+            return val
+        return str(val).strip().lower() in _TRUE
+    if kind == "complete_json":
+        if isinstance(val, (dict, list)):
+            return val
+        try:
+            return json.loads(val) if val is not None else None
+        except (json.JSONDecodeError, TypeError):
+            return None
+    return None if val is None else str(val)
+
+
+def llm_multi(ctx, model_spec, subtasks: Sequence[dict],
+              tuples: Sequence[dict]) -> List[List[Any]]:
+    """One metaprompt pass answering several sub-tasks per tuple.
+
+    ``subtasks`` is a list of ``{"kind": filter|complete|complete_json,
+    "prompt": <prompt spec>}`` dicts sharing one model and one tuple
+    schema.  Returns one result list per subtask, aligned with ``tuples``
+    (filter -> bool, complete -> str|None, complete_json -> obj|None).
+    """
+    model = ctx.resolve_model(model_spec)
+    kinds, texts, ids = [], [], []
+    for st in subtasks:
+        if st["kind"] not in MULTI_KINDS:
+            raise ValueError(f"unfusable sub-task kind {st['kind']!r}")
+        text, pid = ctx.resolve_prompt(st["prompt"])
+        kinds.append(st["kind"])
+        texts.append(text)
+        ids.append(f"{st['kind']}:{pid}")
+    prompt_text = build_multi_task(kinds, texts)
+    prompt_id = "multi|" + "|".join(ids)
+    raw = _map_core(ctx, "multi", model, prompt_text, prompt_id, tuples)
+
+    per_task: List[List[Any]] = [[] for _ in subtasks]
+    n_filters = [0] * len(subtasks)
+    for r in raw:
+        try:
+            obj = json.loads(r) if r is not None else {}
+        except json.JSONDecodeError:
+            obj = {}
+        if not isinstance(obj, dict):
+            obj = {}
+        for k, kind in enumerate(kinds):
+            v = _decode_multi_value(kind, obj.get(f"t{k}"))
+            per_task[k].append(v)
+            if kind == "filter" and v:
+                n_filters[k] += 1
+    for k, kind in enumerate(kinds):
+        if kind == "filter":
+            ctx.record_selectivity(ids[k].split(":", 1)[1],
+                                   n_filters[k], len(tuples))
+    return per_task
 
 
 def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:

@@ -42,7 +42,26 @@ _OUTPUT_CONTRACT = {
     "rerank": (
         "Return the tuple ids ordered from most to least relevant, as a "
         "comma-separated list, e.g. `3,1,2`."),
+    "multi": (
+        "Several sub-tasks are listed above, each tagged `t<k> [<kind>]`. "
+        "Return one line per input tuple formatted as `<id>: <json>` where "
+        "the JSON object has one key per sub-task tag.  filter sub-tasks "
+        "map to true/false, complete sub-tasks to a text string, "
+        "complete_json sub-tasks to a nested JSON object."),
 }
+
+
+def build_multi_task(sub_kinds: Sequence[str],
+                     sub_prompts: Sequence[str]) -> str:
+    """Compose the user-prompt for a fused (multi-output) semantic pass.
+
+    Each sub-task renders as ``t<k> [<kind>]: <prompt>`` — the tag doubles
+    as the output JSON key, and the ``[<kind>]`` annotation is parseable by
+    providers (MockProvider uses it to shape deterministic answers)."""
+    lines = ["Perform ALL of the following sub-tasks on every input tuple:"]
+    for k, (kind, prompt) in enumerate(zip(sub_kinds, sub_prompts)):
+        lines.append(f"t{k} [{kind}]: {prompt}")
+    return "\n".join(lines)
 
 
 def serialize_tuple(tup: dict, fmt: str = "xml") -> str:

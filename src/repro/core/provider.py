@@ -97,9 +97,28 @@ class MockProvider(BaseProvider):
             hashlib.sha256(cls._ID_RE.sub("", text).encode()).digest()[:8],
             "big")
 
+    _MULTI_TASK_RE = re.compile(
+        r"\bt(\d+) \[(filter|complete|complete_json)\]")
+
     def _default_rows(self, mp: MetaPrompt, rows: List[str]) -> List[str]:
         fn = mp.function
         out = []
+        if fn == "multi":
+            # fused pass: answer every sub-task declared in the prefix with
+            # the same content-hash scheme the single-task kinds use
+            tasks = self._MULTI_TASK_RE.findall(mp.prefix)
+            for i, r in enumerate(rows):
+                obj = {}
+                for tag, kind in tasks:
+                    h = self._h(r + mp.prefix + tag)
+                    if kind == "filter":
+                        obj[f"t{tag}"] = h % 2 == 0
+                    elif kind == "complete_json":
+                        obj[f"t{tag}"] = {"value": f"v{h % 10_000}"}
+                    else:
+                        obj[f"t{tag}"] = f"text-{h % 10_000}"
+                out.append(f"{i}: {json.dumps(obj)}")
+            return out
         if fn in ("reduce", "reduce_json"):
             h = self._h(mp.text)
             return [json.dumps({"summary": f"agg-{h % 10_000}"})
@@ -193,7 +212,8 @@ class LocalJaxProvider(BaseProvider):
         # random weights produce uninterpretable bytes; wrap them in the
         # contract shape so downstream parsing stays exercised end-to-end
         return [f"{i}: {text[:32]!r}" for i in range(n_rows)] \
-            if mp.function in ("complete", "complete_json", "filter") \
+            if mp.function in ("complete", "complete_json", "filter",
+                               "multi") \
             else [text[:64]]
 
     def embed(self, model, texts):

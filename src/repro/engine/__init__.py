@@ -1,2 +1,4 @@
 from .table import Table
-from .pipeline import Pipeline, ask
+from .pipeline import Pipeline, PlanNode, ask
+from .optimizer import (OptimizedPlan, PlanCost, estimate_plan_cost,
+                        optimize_plan)

@@ -1,0 +1,452 @@
+"""Cost-based semantic plan optimizer (paper §2.3, "seamless" tier).
+
+FlockMTL's pitch is that LLM-backed relational plans get optimized below
+the query surface: the user chains operators in whatever order reads
+naturally, and the engine re-orders and fuses them so the model sees as
+few tuples — and as few requests — as possible.  This module implements
+that rewrite layer for ``Pipeline`` plans.  Three rules run in sequence:
+
+1. **Pushdown** — cheap relational ops (``filter``, ``limit``, ``select``,
+   key-independent ``order_by``) bubble *toward the scan*, past semantic
+   ops they commute with, so LLM calls see fewer tuples:
+
+   * ``limit`` commutes with per-row map ops (``llm_complete``,
+     ``llm_complete_json``, ``llm_embedding``, ``project``) — they preserve
+     row count and order.  It never crosses ``llm_filter`` / ``order_by`` /
+     ``llm_rerank``.
+   * relational ``filter`` commutes with ``llm_filter`` (conjunctive
+     predicates) and — when its column dependencies are declared via
+     ``Pipeline.filter(pred, cols=...)`` — with map ops whose output
+     column it does not read.
+   * ``select`` crosses ``llm_filter``/``llm_rerank`` when it retains
+     their input columns.
+   * ``order_by`` with a string key crosses map ops that don't produce
+     that key, and ``llm_filter`` (stable sort of a subset == subset of
+     the stable-sorted whole).
+
+2. **Semantic fusion** — adjacent ``llm_filter``/``llm_complete``/
+   ``llm_complete_json`` nodes sharing one model and one input-column set
+   (and with no def-use dependency between them) merge into a single
+   ``llm_fused`` node that answers all sub-tasks in one metaprompt pass
+   (``core.functions.llm_multi``, kind ``multi``).
+
+3. **Cost-ordered filter chains** — runs of consecutive ``llm_filter``
+   nodes are re-ordered by estimated per-tuple token cost x expected
+   selectivity (cheap, selective filters first), using
+   ``provider.estimate_tokens`` and the per-prompt pass rates recorded in
+   ``SemanticContext.selectivity_stats``.
+
+``optimize_plan`` is pure planning: it returns new ``PlanNode`` lists
+(fused nodes carry fresh closures) plus a cost estimate of both plans —
+nothing executes until ``Pipeline.collect()`` runs the rewritten plan.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Sequence, Tuple
+
+from repro.core import functions as F
+from repro.core.batching import plan_batches
+from repro.core.functions import SemanticContext
+from repro.core.metaprompt import build_multi_task, build_prefix, \
+    serialize_tuple
+from repro.core.provider import estimate_tokens
+
+from .table import Table
+
+# node taxonomy --------------------------------------------------------------
+SEMANTIC_MAP_OPS = ("llm_complete", "llm_complete_json", "llm_embedding")
+SEMANTIC_OPS = SEMANTIC_MAP_OPS + ("llm_filter", "llm_rerank", "llm_fused")
+RELATIONAL_OPS = ("filter", "limit", "select", "order_by")
+FUSABLE = {"llm_filter": "filter", "llm_complete": "complete",
+           "llm_complete_json": "complete_json"}
+
+# default pass rate assumed for predicates with no recorded statistics
+DEFAULT_SELECTIVITY = 0.5
+# token estimate for a column whose width we cannot sample (produced
+# mid-plan by an earlier semantic op)
+DEFAULT_COL_TOKENS = 16
+_SAMPLE_ROWS = 32
+
+
+@dataclass
+class PlanCost:
+    """Estimated provider-side cost of one plan."""
+    requests: int = 0
+    tokens: int = 0
+    rows_into_llm: int = 0      # tuples fed to semantic ops, post-dedup-free
+
+    def __str__(self):
+        return (f"requests={self.requests} tokens={self.tokens} "
+                f"llm_rows={self.rows_into_llm}")
+
+
+@dataclass
+class OptimizedPlan:
+    nodes: List[Any]                    # rewritten PlanNode list
+    rewrites: List[str] = field(default_factory=list)
+    naive_cost: PlanCost = field(default_factory=PlanCost)
+    optimized_cost: PlanCost = field(default_factory=PlanCost)
+    # per-node {rows, requests, tokens} estimates, aligned with the
+    # original and rewritten node lists (PlanNodes are shared between the
+    # two plans, so estimates live here, not on node.info)
+    naive_node_costs: List[dict] = field(default_factory=list)
+    optimized_node_costs: List[dict] = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+def _avg_tuple_tokens(source: Table, cols: Sequence[str],
+                      serialization: str) -> int:
+    """Mean serialized-tuple token cost, sampled from the source table.
+
+    Columns produced mid-plan (not present at the scan) are charged a
+    flat default width."""
+    known = [c for c in cols if c in source.columns]
+    missing = len(cols) - len(known)
+    if not known:
+        return max(1, missing * DEFAULT_COL_TOKENS)
+    n = min(len(source), _SAMPLE_ROWS)
+    if n == 0:
+        return max(1, missing * DEFAULT_COL_TOKENS)
+    total = 0
+    for i in range(n):
+        tup = {c: source.columns[c][i] for c in known}
+        total += estimate_tokens(serialize_tuple(tup, serialization))
+    return max(1, total // n + missing * DEFAULT_COL_TOKENS)
+
+
+def _node_prompt_text(ctx: SemanticContext, node) -> Tuple[str, str]:
+    """(prompt_text, prompt_id) for a semantic node, '' for non-LLM ops."""
+    spec = node.info.get("prompt")
+    if spec is None:
+        return "", ""
+    return ctx.resolve_prompt(spec)
+
+
+def _fused_prompt_text(ctx: SemanticContext, node) -> str:
+    kinds = node.info["kinds"]
+    texts = [ctx.resolve_prompt(p)[0] for p in node.info["prompts"]]
+    return build_multi_task(kinds, texts)
+
+
+def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
+                       source: Table) -> Tuple[float, PlanCost]:
+    """(rows_out, provider cost) for one node under the cost model.
+
+    Cardinalities flow through: relational filters halve, llm_filters use
+    recorded selectivity, limit truncates, maps preserve."""
+    op, info = node.op, node.info
+    cost = PlanCost()
+    rows = rows_in
+
+    if op == "filter":
+        return rows * DEFAULT_SELECTIVITY, cost
+    if op == "limit":
+        return min(rows, info.get("n", rows)), cost
+    if op in ("select", "order_by", "project", "scan"):
+        return rows, cost
+    if op not in SEMANTIC_OPS:
+        return rows, cost
+
+    model = ctx.resolve_model(info["model"])
+    n = int(round(rows))
+    if n <= 0:
+        return 0.0, cost
+    per_tuple = _avg_tuple_tokens(source, info.get("cols", ()),
+                                  ctx.serialization)
+
+    if op == "llm_embedding":
+        cost.requests = 1
+        cost.tokens = n * per_tuple
+        cost.rows_into_llm = n
+        return rows, cost
+
+    if op == "llm_rerank":
+        window, stride = 10, 5
+        windows = 1 if n <= window else 1 + -(-(n - window) // stride)
+        prompt_text, _ = _node_prompt_text(ctx, node)
+        prefix_tokens = estimate_tokens(
+            build_prefix("rerank", prompt_text, ctx.serialization))
+        cost.requests = windows
+        cost.tokens = windows * (prefix_tokens + window * per_tuple)
+        cost.rows_into_llm = n
+        return rows, cost
+
+    if op == "llm_fused":
+        kind = "multi"
+        prompt_text = _fused_prompt_text(ctx, node)
+    else:
+        kind = {"llm_filter": "filter", "llm_complete": "complete",
+                "llm_complete_json": "complete_json"}[op]
+        prompt_text, _ = _node_prompt_text(ctx, node)
+    prefix_tokens = estimate_tokens(
+        build_prefix(kind, prompt_text, ctx.serialization))
+    plan = plan_batches([per_tuple] * n, prefix_tokens,
+                        model.context_window, model.max_output_tokens,
+                        ctx.max_batch if ctx.enable_batching else 1)
+    cost.requests = len(plan.batches)
+    cost.tokens = sum(plan.est_tokens) + cost.requests * prefix_tokens
+    cost.rows_into_llm = n
+
+    if op == "llm_filter":
+        _, pid = _node_prompt_text(ctx, node)
+        rows = rows * ctx.expected_selectivity(pid, DEFAULT_SELECTIVITY)
+    elif op == "llm_fused":
+        for k, pid in zip(node.info["kinds"], node.info["prompt_ids"]):
+            if k == "filter":
+                rows = rows * ctx.expected_selectivity(
+                    pid, DEFAULT_SELECTIVITY)
+    return rows, cost
+
+
+def estimate_plan_cost(ctx: SemanticContext, source: Table,
+                       nodes: Sequence) -> Tuple[PlanCost, List[dict]]:
+    total = PlanCost()
+    per_node: List[dict] = []
+    rows = float(len(source))
+    for node in nodes:
+        rows, c = estimate_node_cost(ctx, node, rows, source)
+        per_node.append({"rows": int(round(rows)),
+                         "requests": c.requests, "tokens": c.tokens})
+        total.requests += c.requests
+        total.tokens += c.tokens
+        total.rows_into_llm += c.rows_into_llm
+    return total, per_node
+
+
+# ---------------------------------------------------------------------------
+# rule 1: relational pushdown
+# ---------------------------------------------------------------------------
+def _commutes_before(rel, sem) -> bool:
+    """May relational node ``rel`` move to run before node ``sem``?"""
+    r, s = rel.op, sem.op
+    produced = sem.info.get("out")
+    fused_outs = sem.info.get("outs", ())
+
+    if r == "limit":
+        return s in ("llm_complete", "llm_complete_json", "llm_embedding",
+                     "project")
+    if r == "filter":
+        if s == "llm_filter":
+            return True
+        if s in ("llm_complete", "llm_complete_json", "llm_embedding",
+                 "project"):
+            deps = rel.info.get("cols")
+            if deps is None:
+                return False               # opaque predicate: stay put
+            banned = set(fused_outs) | ({produced} if produced else set())
+            return not (set(deps) & banned)
+        return False
+    if r == "select":
+        if s in ("llm_filter", "llm_rerank"):
+            return set(sem.info.get("cols", ())) <= set(
+                rel.info.get("cols", ()))
+        return False
+    if r == "order_by":
+        key = rel.info.get("key")
+        if rel.info.get("key_is_callable"):
+            return False
+        if s == "llm_filter":
+            return True
+        if s in ("llm_complete", "llm_complete_json", "llm_embedding",
+                 "project"):
+            banned = set(fused_outs) | ({produced} if produced else set())
+            return key not in banned
+        return False
+    return False
+
+
+def _pushdown(nodes: List, rewrites: List[str]) -> List:
+    nodes = list(nodes)
+    changed = True
+    while changed:
+        changed = False
+        for i in range(len(nodes) - 1):
+            a, b = nodes[i], nodes[i + 1]
+            if (a.op in SEMANTIC_OPS + ("project",)
+                    and b.op in RELATIONAL_OPS
+                    and _commutes_before(b, a)):
+                nodes[i], nodes[i + 1] = b, a
+                rewrites.append(f"pushdown({b.op} before {a.op})")
+                changed = True
+    return nodes
+
+
+# ---------------------------------------------------------------------------
+# rule 2: semantic fusion
+# ---------------------------------------------------------------------------
+def _model_identity(ctx: SemanticContext, spec):
+    # the full resolved resource, not just name@version: inline specs all
+    # land on version 0, and fusing ops whose context_window /
+    # max_output_tokens differ would run one sub-task under the other's
+    # limits
+    try:
+        return ctx.resolve_model(spec)
+    except KeyError:
+        return repr(sorted(spec.items()))
+
+
+def _can_join_group(ctx, group: List, node) -> bool:
+    if node.op not in FUSABLE:
+        return False
+    head = group[0]
+    if tuple(node.info["cols"]) != tuple(head.info["cols"]):
+        return False
+    if _model_identity(ctx, node.info["model"]) != _model_identity(
+            ctx, head.info["model"]):
+        return False
+    # def-use: a later op reading an earlier op's output cannot fuse —
+    # guaranteed here because cols are identical and outputs are new
+    # columns, but guard against out-name collisions with input cols
+    produced = {g.info.get("out") for g in group if g.info.get("out")}
+    return not (set(node.info["cols"]) & produced)
+
+
+def _make_fused_node(ctx: SemanticContext, group: List):
+    from .pipeline import PlanNode      # local import: avoid cycle
+
+    cols = list(group[0].info["cols"])
+    model_spec = group[0].info["model"]
+    subtasks = [{"kind": FUSABLE[g.op], "prompt": g.info["prompt"],
+                 "out": g.info.get("out")} for g in group]
+    prompt_ids = [ctx.resolve_prompt(g.info["prompt"])[1] for g in group]
+
+    def fn(t: Table) -> Table:
+        tuples = [{c: r[c] for c in cols} for r in t.rows()]
+        per_task = F.llm_multi(ctx, model_spec,
+                               [{"kind": s["kind"], "prompt": s["prompt"]}
+                                for s in subtasks], tuples)
+        mask = [True] * len(tuples)
+        res = t
+        for sub, vals in zip(subtasks, per_task):
+            if sub["kind"] == "filter":
+                mask = [m and bool(v) for m, v in zip(mask, vals)]
+            else:
+                res = res.with_column(sub["out"], vals)
+        return res.filter_mask(mask)
+
+    return PlanNode("llm_fused", {
+        "model": model_spec, "cols": cols,
+        "kinds": [s["kind"] for s in subtasks],
+        "outs": [s["out"] for s in subtasks if s["out"]],
+        "prompts": [g.info["prompt"] for g in group],
+        "prompt_ids": prompt_ids,
+        "fused": [g.op for g in group]}, fn)
+
+
+def _fuse(ctx: SemanticContext, nodes: List, rewrites: List[str]) -> List:
+    out: List = []
+    i = 0
+    while i < len(nodes):
+        node = nodes[i]
+        if node.op in FUSABLE:
+            group = [node]
+            j = i + 1
+            while j < len(nodes) and _can_join_group(ctx, group, nodes[j]):
+                group.append(nodes[j])
+                j += 1
+            if len(group) > 1:
+                out.append(_make_fused_node(ctx, group))
+                rewrites.append(
+                    "fusion(" + "+".join(g.op for g in group) + ")")
+                i = j
+                continue
+        out.append(node)
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule 3: cost-ordered filter chains
+# ---------------------------------------------------------------------------
+def _filter_rank(ctx: SemanticContext, node, source: Table) -> float:
+    """Predicate-ordering rank: token cost per unit of elimination,
+    cost / (1 - selectivity), ascending — cheap, selective predicates run
+    first.  (Plain cost x selectivity mis-orders chains where an
+    expensive filter is also very selective; the final plan is
+    cost-gated either way.)"""
+    prompt_text, pid = _node_prompt_text(ctx, node)
+    per_tuple = _avg_tuple_tokens(source, node.info.get("cols", ()),
+                                  ctx.serialization)
+    prefix = estimate_tokens(
+        build_prefix("filter", prompt_text, ctx.serialization))
+    sel = ctx.expected_selectivity(pid, DEFAULT_SELECTIVITY)
+    return (prefix + per_tuple) / max(1.0 - sel, 1e-6)
+
+
+def _reorder_filters(ctx: SemanticContext, nodes: List, source: Table,
+                     rewrites: List[str]) -> List:
+    out: List = []
+    i = 0
+    while i < len(nodes):
+        if nodes[i].op != "llm_filter":
+            out.append(nodes[i])
+            i += 1
+            continue
+        j = i
+        while j < len(nodes) and nodes[j].op == "llm_filter":
+            j += 1
+        chain = nodes[i:j]
+        ranked = sorted(chain, key=lambda n: _filter_rank(ctx, n, source))
+        if ranked != chain:
+            rewrites.append(
+                f"reorder_filters(chain of {len(chain)} by cost per "
+                f"eliminated tuple)")
+        out.extend(ranked)
+        i = j
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+# latency-equivalent token cost charged per provider request when ranking
+# plans: a chat-API round trip costs ~30 ms of overhead, the price of a
+# few hundred tokens of service time (benchmarks/run.py batching bench)
+REQUEST_OVERHEAD_TOKENS = 200
+
+
+def _cost_rank(c: PlanCost) -> float:
+    return c.tokens + REQUEST_OVERHEAD_TOKENS * c.requests
+
+
+def optimize_plan(ctx: SemanticContext, source: Table,
+                  nodes: Sequence) -> OptimizedPlan:
+    """Rewrite a Pipeline node list; returns both plans' cost estimates.
+
+    Pushdown always applies (it only ever shrinks the tuple stream LLM
+    ops see); the filter re-ordering and semantic-fusion rewrites are
+    cost-gated — each is kept only if the cost model says the plan got
+    cheaper (e.g. fusing a highly selective filter with a completion
+    would run the completion over the whole input, so it is rejected).
+    Pure planning: no provider calls, no table materialisation."""
+    naive = [n for n in nodes]
+    rewrites: List[str] = []
+    new = _pushdown(list(nodes), rewrites)
+
+    cost, _ = estimate_plan_cost(ctx, source, new)
+    for rule in (_reorder_filters, _fuse):
+        trial_rw: List[str] = []
+        if rule is _reorder_filters:
+            trial = rule(ctx, new, source, trial_rw)
+        else:
+            trial = rule(ctx, new, trial_rw)
+        if not trial_rw:
+            continue
+        trial_cost, _ = estimate_plan_cost(ctx, source, trial)
+        if _cost_rank(trial_cost) <= _cost_rank(cost):
+            new, cost = trial, trial_cost
+            rewrites.extend(trial_rw)
+        else:
+            rewrites.extend(f"rejected({rw}: estimated cost higher)"
+                            for rw in trial_rw)
+
+    plan = OptimizedPlan(nodes=new, rewrites=rewrites)
+    plan.naive_cost, plan.naive_node_costs = estimate_plan_cost(
+        ctx, source, list(naive))
+    plan.optimized_cost, plan.optimized_node_costs = estimate_plan_cost(
+        ctx, source, new)
+    return plan

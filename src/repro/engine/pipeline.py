@@ -6,6 +6,30 @@ plan with the optimizer's execution reports (batch sizes, cache hits,
 dedup factor, meta-prompt prefix) — the paper's plan-inspection interface
 (Fig. 2b) as a library call.
 
+**Plan optimization** (``optimizer.py``): by default ``collect()`` first
+rewrites the chained node list with three cost-based rules —
+
+  * *pushdown*: cheap relational ops (``filter``/``limit``/``select``/
+    key-independent ``order_by``) bubble below semantic ops they commute
+    with, so LLM calls see fewer tuples (a ``limit(10)`` chained after an
+    ``llm_complete`` over 10k rows runs first, making the LLM pass 1000x
+    cheaper);
+  * *semantic fusion*: adjacent ``llm_filter``/``llm_complete``/
+    ``llm_complete_json`` nodes sharing one model + input-column set merge
+    into a single multi-output metaprompt pass (one request stream instead
+    of N);
+  * *cost-ordered filter chains*: consecutive ``llm_filter`` nodes run
+    cheapest-and-most-selective first, ranked by estimated token cost x
+    the pass rates recorded in ``SemanticContext.selectivity_stats``.
+
+``collect(optimize=False)`` is the escape hatch that executes nodes
+exactly as chained; ``explain()`` prints the logical and rewritten plans
+side by side with estimated request/token counts and the fired rewrites.
+
+Relational ``filter`` predicates are opaque closures; pass
+``filter(pred, cols=[...])`` to declare the columns the predicate reads
+and unlock pushdown past column-producing semantic ops.
+
 ``ask()`` is the ASK functionality: NL -> pipeline.  Faithful NL->SQL needs
 an instruction-tuned checkpoint; with research (random-weight) models it is
 a deterministic template planner — DEMO-ONLY, as recorded in DESIGN.md §8.
@@ -49,12 +73,17 @@ class Pipeline:
     def select(self, *names):
         return self._add("select", lambda t: t.select(*names), cols=names)
 
-    def filter(self, pred):
-        return self._add("filter", lambda t: t.filter(pred))
+    def filter(self, pred, cols: Optional[Sequence[str]] = None):
+        """``cols`` declares which columns ``pred`` reads — optional, but
+        required for the optimizer to push the filter past
+        column-producing semantic ops."""
+        info = {} if cols is None else {"cols": list(cols)}
+        return self._add("filter", lambda t: t.filter(pred), **info)
 
     def order_by(self, key, desc=False):
         return self._add("order_by", lambda t: t.order_by(key, desc),
-                         key=str(key), desc=desc)
+                         key=str(key), desc=desc,
+                         key_is_callable=callable(key))
 
     def limit(self, n):
         return self._add("limit", lambda t: t.limit(n), n=n)
@@ -109,10 +138,22 @@ class Pipeline:
                          cols=cols)
 
     # ---- execution -----------------------------------------------------------
-    def collect(self) -> Table:
+    def _plan(self):
+        """Run (and memoise) the cost-based rewrite for the current nodes."""
+        from .optimizer import optimize_plan
+        if getattr(self, "_opt", None) is None:
+            self._opt = optimize_plan(self.ctx, self.source, self.nodes)
+        return self._opt
+
+    def collect(self, optimize: bool = True) -> Table:
+        """Execute the plan.  ``optimize=False`` is the escape hatch that
+        runs the nodes exactly as chained (no pushdown/fusion/reorder)."""
+        nodes = self._plan().nodes if optimize else self.nodes
+        self._executed_nodes = nodes
+        self._executed_optimized = optimize
         t = self.source
         base = len(self.ctx.reports)
-        for node in self.nodes:
+        for node in nodes:
             if node.fn is not None:
                 before = len(self.ctx.reports)
                 t = node.fn(t)
@@ -122,25 +163,52 @@ class Pipeline:
         self._last_reports = self.ctx.reports[base:]
         return t
 
-    def reduce(self, model, prompt, cols: Sequence[str]):
-        t = self.collect()
+    def reduce(self, model, prompt, cols: Sequence[str],
+               optimize: bool = True):
+        t = self.collect(optimize=optimize)
         tuples = [{c: r[c] for c in cols} for r in t.rows()]
         return F.llm_reduce(self.ctx, model, prompt, tuples)
 
-    def explain(self) -> str:
-        lines = ["Pipeline plan:"]
-        for i, node in enumerate(self.nodes):
+    # ---- plan inspection -----------------------------------------------------
+    def _render_nodes(self, lines, nodes, node_costs):
+        for i, node in enumerate(nodes):
             info = {k: v for k, v in node.info.items()
-                    if k not in ("model", "prompt")}
-            lines.append(f"  [{i}] {node.op:18s} {info}")
+                    if k not in ("model", "prompt", "prompts",
+                                 "prompt_ids")}
+            est = node_costs[i] if i < len(node_costs) else None
+            est_s = ""
+            if est and est["requests"]:
+                est_s = (f"  est[rows->{est['rows']} "
+                         f"req={est['requests']} tok={est['tokens']}]")
+            lines.append(f"  [{i}] {node.op:18s} {info}{est_s}")
             if node.report_slot is not None:
                 r = self.ctx.reports[node.report_slot]
+                sel = ("" if r.selectivity is None
+                       else f" selectivity={r.selectivity:.2f}")
                 lines.append(
                     f"        tuples={r.n_tuples} unique={r.n_unique} "
                     f"cache_hits={r.cache_hits} requests={r.requests} "
                     f"retries={r.retries} nulls={r.nulls} "
                     f"batch_sizes={r.batch_sizes[:8]} "
-                    f"serialization={r.serialization}")
+                    f"serialization={r.serialization}{sel}")
+
+    def explain(self) -> str:
+        """Render the logical plan, the optimizer's rewritten plan, the
+        fired rewrite rules, and both plans' estimated request/token
+        totals (paper Fig. 2b, now with the optimizer's decisions)."""
+        opt = self._plan()
+        lines = ["Pipeline plan (as written):"]
+        self._render_nodes(lines, self.nodes, opt.naive_node_costs)
+        lines.append(f"  estimated: {opt.naive_cost}")
+        lines.append("Optimized plan:")
+        self._render_nodes(lines, opt.nodes, opt.optimized_node_costs)
+        lines.append(f"  estimated: {opt.optimized_cost}")
+        if opt.rewrites:
+            lines.append("Rewrites applied:")
+            for rw in opt.rewrites:
+                lines.append(f"  - {rw}")
+        else:
+            lines.append("Rewrites applied: none")
         return "\n".join(lines)
 
 

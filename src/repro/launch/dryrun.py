@@ -132,6 +132,8 @@ def lower_and_analyze(cfg, cell, mesh, *, want_memory=True):
     compiled = lowered.compile()
     dt = time.time() - t0
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax<=0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     res = {
         "compile_s": round(dt, 2),
         "flops_per_dev": float(ca.get("flops", 0.0)),

@@ -25,9 +25,9 @@ SCRIPT = textwrap.dedent("""
     from repro.configs import get_smoke_config
     from repro.models.config import ShapeCell
     from repro.launch import dryrun as D
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_smoke_config("gemma3-12b").replace(
         num_layers=12, shard_multiple=4)
     cell = ShapeCell("t", 32, 4, "train")

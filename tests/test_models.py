@@ -13,6 +13,7 @@ from repro.models.config import SHAPES, ShapeCell
 ARCHS = list_archs()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     """Reduced config: one forward + loss on CPU, shapes + no NaNs."""
@@ -30,6 +31,7 @@ def test_smoke_train_step(arch):
     assert float(loss) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_grad_step(arch):
     """One backward pass produces finite grads for every leaf."""
@@ -43,6 +45,7 @@ def test_smoke_grad_step(arch):
     assert all(jax.tree.leaves(finite))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_decode_matches_teacher_forcing(arch):
     cfg = get_smoke_config(arch).replace(remat=False, capacity_factor=16.0)

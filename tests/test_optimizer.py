@@ -1,0 +1,436 @@
+"""Plan-optimizer tests: golden plans, naive/optimized equivalence, and
+edge cases for the parsing + batching helpers the optimizer relies on.
+
+The equivalence tests use a content-based MockProvider behaviour so the
+same tuple gets the same answer regardless of which request (single-task
+or fused multi-task) carries it — that is exactly the determinism a real
+provider gives a temperature-0 prompt, and it lets us assert optimized
+plans return identical rows while issuing strictly fewer requests.
+"""
+
+import json
+import re
+
+import pytest
+
+from repro.core import (MockProvider, SemanticContext, llm_multi,
+                        plan_batches, reset_global_catalog, run_adaptive)
+from repro.core.batching import ContextOverflowError
+from repro.core.functions import _parse_permutation, _parse_rows
+from repro.engine import Pipeline, Table, optimize_plan
+
+_ROW_CONTENT = re.compile(r"<text>(.*?)</text>")
+_TASK = re.compile(r"\bt(\d+) \[(filter|complete|complete_json)\]")
+
+
+def _content(row: str) -> str:
+    m = _ROW_CONTENT.search(row)
+    return m.group(1) if m else row
+
+
+def _semantic_behaviour(kind, prefix, rows):
+    """Deterministic content-based answers: filter=true iff 'join' in the
+    text column; complete echoes the text; complete_json wraps it."""
+    def one(kind, text):
+        if kind == "filter":
+            return "true" if "join" in text else "false"
+        if kind == "complete_json":
+            return json.dumps({"topic": text.split()[0] if text else ""})
+        return f"summary({text})"
+
+    if kind == "multi":
+        tasks = _TASK.findall(prefix)
+        out = []
+        for i, r in enumerate(rows):
+            text = _content(r)
+            obj = {}
+            for tag, tkind in tasks:
+                v = one(tkind, text)
+                obj[f"t{tag}"] = (v == "true" if tkind == "filter"
+                                  else json.loads(v)
+                                  if tkind == "complete_json" else v)
+            out.append(f"{i}: {json.dumps(obj)}")
+        return out
+    if kind in ("filter", "complete", "complete_json"):
+        return [f"{i}: {one(kind, _content(r))}"
+                for i, r in enumerate(rows)]
+    return None
+
+
+def _ctx(**kw):
+    reset_global_catalog()
+    return SemanticContext(provider=MockProvider(_semantic_behaviour), **kw)
+
+
+@pytest.fixture
+def table():
+    rows = 12
+    return Table({
+        "id": list(range(rows)),
+        "text": [f"paper {i} about {'join' if i % 3 == 0 else 'index'} "
+                 f"structures" for i in range(rows)],
+        "year": [2000 + i for i in range(rows)],
+    })
+
+
+MODEL = {"model": "m", "context_window": 4096, "max_output_tokens": 8}
+
+
+def _ops(pipe):
+    return [n.op for n in pipe._plan().nodes]
+
+
+# ---------------------------------------------------------------------------
+# golden-plan regressions: the rewrite decisions are locked in
+# ---------------------------------------------------------------------------
+def test_golden_pushdown_limit_and_order_by(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .order_by("year", desc=True)
+            .limit(3))
+    assert _ops(pipe) == ["scan", "order_by", "limit", "llm_complete"]
+    plan = pipe.explain()
+    assert plan.splitlines()[0] == "Pipeline plan (as written):"
+    assert "Rewrites applied:" in plan
+    assert "pushdown(order_by before llm_complete)" in plan
+    assert "pushdown(limit before llm_complete)" in plan
+    # the limit cut the estimated LLM exposure from 12 rows to 3
+    opt = pipe._plan()
+    assert opt.naive_cost.rows_into_llm == 12
+    assert opt.optimized_cost.rows_into_llm == 3
+    assert opt.optimized_cost.tokens < opt.naive_cost.tokens
+
+
+def test_golden_fusion_filter_complete_json(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .llm_complete_json("meta", MODEL, {"prompt": "extract topic"},
+                               ["text"]))
+    assert _ops(pipe) == ["scan", "llm_fused"]
+    plan = pipe.explain()
+    assert "fusion(llm_filter+llm_complete+llm_complete_json)" in plan
+    fused = pipe._plan().nodes[1]
+    assert fused.info["kinds"] == ["filter", "complete", "complete_json"]
+    assert fused.info["outs"] == ["summary", "meta"]
+    # 3 single-op passes -> 1 fused pass
+    opt = pipe._plan()
+    assert opt.optimized_cost.requests < opt.naive_cost.requests
+
+
+def test_golden_filter_chain_reorder(table):
+    ctx = _ctx()
+    # record pass rates: 'rare' keeps 10%, 'common' keeps 90% — with equal
+    # token costs the optimizer must run 'rare' first
+    ctx.record_selectivity("inline:rare?", 1, 10)
+    ctx.record_selectivity("inline:common?", 9, 10)
+    m2 = {"model": "m2", "context_window": 4096, "max_output_tokens": 8}
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "common?"}, ["text"])
+            .llm_filter(m2, {"prompt": "rare?"}, ["text"]))
+    nodes = pipe._plan().nodes
+    assert [n.info["prompt"]["prompt"] for n in nodes[1:]] == \
+        ["rare?", "common?"]
+    plan = pipe.explain()
+    assert "reorder_filters(chain of 2 by cost per eliminated tuple)" in \
+        plan
+    assert "rejected(" not in plan
+
+
+def test_golden_explain_shows_both_plans_with_estimates(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .limit(2))
+    plan = pipe.explain()
+    lines = plan.splitlines()
+    assert lines[0] == "Pipeline plan (as written):"
+    assert "Optimized plan:" in lines
+    assert sum(l.startswith("  estimated: requests=") for l in lines) == 2
+    assert any("est[rows->" in l and "req=" in l and "tok=" in l
+               for l in lines)
+
+
+# ---------------------------------------------------------------------------
+# safety: rewrites that must NOT fire
+# ---------------------------------------------------------------------------
+def test_opaque_relational_filter_not_pushed_past_map(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .filter(lambda r: "join" in r["summary"]))   # reads the output!
+    assert _ops(pipe) == ["scan", "llm_complete", "filter"]
+
+
+def test_declared_filter_on_output_column_not_pushed(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .filter(lambda r: "join" in r["summary"], cols=["summary"]))
+    assert _ops(pipe) == ["scan", "llm_complete", "filter"]
+
+
+def test_limit_not_pushed_past_llm_filter(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+            .limit(2))
+    assert _ops(pipe) == ["scan", "llm_filter", "limit"]
+
+
+def test_no_fusion_across_models_or_columns(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+            .llm_complete("summary", {"model": "other"},
+                          {"prompt": "summarize"}, ["text"])
+            .llm_complete_json("meta", {"model": "other"},
+                               {"prompt": "extract"}, ["text", "year"]))
+    assert _ops(pipe) == ["scan", "llm_filter", "llm_complete",
+                          "llm_complete_json"]
+
+
+def test_no_fusion_when_inline_model_limits_differ(table):
+    # same model name, but the completion needs a bigger output budget —
+    # fusing would run it under the filter's limits
+    ctx = _ctx()
+    small = {"model": "m", "context_window": 512, "max_output_tokens": 8}
+    big = {"model": "m", "context_window": 8192, "max_output_tokens": 256}
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(small, {"prompt": "about joins?"}, ["text"])
+            .llm_complete("summary", big, {"prompt": "summarize"},
+                          ["text"]))
+    assert _ops(pipe) == ["scan", "llm_filter", "llm_complete"]
+
+
+def test_fusion_rejected_when_filter_is_highly_selective(table):
+    # a 1%-selective filter means the naive plan completes ~0 rows; the
+    # fused pass would complete all of them — the cost gate must refuse
+    ctx = _ctx()
+    ctx.record_selectivity("inline:almost nothing?", 1, 100)
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "almost nothing?"}, ["text"])
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"]))
+    assert _ops(pipe) == ["scan", "llm_filter", "llm_complete"]
+    assert any(rw.startswith("rejected(fusion")
+               for rw in pipe._plan().rewrites)
+
+
+def test_filter_reorder_keeps_already_optimal_chain(table):
+    # cheap+selective filter already first: the plan must not get worse,
+    # either by the rank metric or after the cost gate
+    ctx = _ctx()
+    ctx.record_selectivity("inline:cheap?", 2, 10)
+    ctx.record_selectivity("inline:pricey?", 1, 10)
+    wide = {"model": "m2", "context_window": 4096, "max_output_tokens": 8}
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "cheap?"}, ["text"])
+            .llm_filter(wide, {"prompt": "pricey?" + "x" * 2000},
+                        ["text", "year"]))
+    opt = pipe._plan()
+    applied = [rw for rw in opt.rewrites if not rw.startswith("rejected")]
+    assert ([n.info["prompt"]["prompt"] for n in opt.nodes[1:]][0]
+            == "cheap?") or not applied
+    from repro.engine.optimizer import _cost_rank
+    assert _cost_rank(opt.optimized_cost) <= _cost_rank(opt.naive_cost)
+
+
+def test_callable_order_by_key_not_pushed(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .order_by(lambda r: r["year"]))
+    assert _ops(pipe) == ["scan", "llm_complete", "order_by"]
+
+
+# ---------------------------------------------------------------------------
+# equivalence: identical rows, strictly fewer requests
+# ---------------------------------------------------------------------------
+def _rows_of(t: Table):
+    return t.rows()
+
+
+def _run_both(make_pipe):
+    """Execute the same logical plan naive and optimized on fresh
+    contexts; returns (naive_rows, opt_rows, naive_requests,
+    opt_requests)."""
+    ctx_n = _ctx(enable_cache=False)
+    out_n = make_pipe(ctx_n).collect(optimize=False)
+    ctx_o = _ctx(enable_cache=False)
+    out_o = make_pipe(ctx_o).collect()
+    return (_rows_of(out_n), _rows_of(out_o),
+            ctx_n.provider.stats.calls, ctx_o.provider.stats.calls)
+
+
+def test_equivalence_pushdown(table):
+    def make(ctx):
+        return (Pipeline(ctx, table, "papers")
+                .filter(lambda r: r["year"] < 2010, cols=["year"])
+                .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                              ["text"])
+                .order_by("year")
+                .limit(4))
+    rows_n, rows_o, req_n, req_o = _run_both(make)
+    assert rows_n == rows_o
+    assert req_o <= req_n
+
+
+def test_equivalence_fusion_identical_rows_fewer_requests(table):
+    def make(ctx):
+        return (Pipeline(ctx, table, "papers")
+                .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+                .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                              ["text"])
+                .llm_complete_json("meta", MODEL,
+                                   {"prompt": "extract topic"}, ["text"]))
+    rows_n, rows_o, req_n, req_o = _run_both(make)
+    assert rows_n == rows_o
+    assert req_o < req_n            # strictly fewer provider requests
+
+
+def test_equivalence_filter_reorder(table):
+    def make(ctx):
+        ctx.record_selectivity("inline:about joins?", 1, 3)
+        return (Pipeline(ctx, table, "papers")
+                .llm_filter(MODEL, {"prompt": "text present?"}, ["text"])
+                .llm_filter({"model": "m2", "context_window": 4096},
+                            {"prompt": "about joins?"}, ["text"]))
+    rows_n, rows_o, req_n, req_o = _run_both(make)
+    assert sorted(r["id"] for r in rows_n) == \
+        sorted(r["id"] for r in rows_o)
+    assert req_o <= req_n
+
+
+def test_escape_hatch_runs_plan_as_written(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .limit(3))
+    pipe.collect(optimize=False)
+    assert [n.op for n in pipe._executed_nodes] == \
+        ["scan", "llm_complete", "limit"]
+    pipe.collect()
+    assert [n.op for n in pipe._executed_nodes] == \
+        ["scan", "limit", "llm_complete"]
+
+
+# ---------------------------------------------------------------------------
+# llm_multi unit behaviour
+# ---------------------------------------------------------------------------
+def test_llm_multi_decodes_every_kind(table):
+    ctx = _ctx()
+    tuples = [{"text": t} for t in table.column("text")[:4]]
+    flt, summ, meta = llm_multi(
+        ctx, MODEL,
+        [{"kind": "filter", "prompt": {"prompt": "about joins?"}},
+         {"kind": "complete", "prompt": {"prompt": "summarize"}},
+         {"kind": "complete_json", "prompt": {"prompt": "topic"}}],
+        tuples)
+    assert [isinstance(b, bool) for b in flt] == [True] * 4
+    assert all(isinstance(s, str) for s in summ)
+    assert all(isinstance(m, dict) for m in meta)
+    assert ctx.reports[-1].function == "multi"
+    assert ctx.reports[-1].requests == 1
+
+
+def test_llm_multi_rejects_unfusable_kind():
+    ctx = _ctx()
+    with pytest.raises(ValueError):
+        llm_multi(ctx, MODEL,
+                  [{"kind": "rerank", "prompt": {"prompt": "x"}}],
+                  [{"text": "a"}])
+
+
+def test_llm_multi_records_filter_selectivity(table):
+    ctx = _ctx()
+    tuples = [{"text": t} for t in table.column("text")]
+    llm_multi(ctx, MODEL,
+              [{"kind": "filter", "prompt": {"prompt": "about joins?"}}],
+              tuples)
+    # 'join' appears in every third row of the fixture
+    assert ctx.expected_selectivity("inline:about joins?") == \
+        pytest.approx(4 / 12)
+
+
+# ---------------------------------------------------------------------------
+# edge cases: _parse_rows / _parse_permutation / plan_batches
+# ---------------------------------------------------------------------------
+def test_parse_rows_empty_and_malformed():
+    assert _parse_rows([], 0) == []
+    assert _parse_rows([], 3) == [None, None, None]
+    assert _parse_rows(["garbage", ":", "x: y"], 2) == [None, None]
+
+
+def test_parse_rows_out_of_range_and_whitespace():
+    out = _parse_rows(["0:  hello ", "7: ignored", "1:world"], 2)
+    assert out == ["hello", "world"]
+
+
+def test_parse_rows_last_assignment_wins():
+    assert _parse_rows(["0: a", "0: b"], 1) == ["b"]
+
+
+def test_parse_permutation_garbage_and_duplicates():
+    assert _parse_permutation("", 3) == [0, 1, 2]
+    assert _parse_permutation("no digits here", 2) == [0, 1]
+    assert _parse_permutation("2, 2, 0", 3) == [2, 0, 1]
+    assert _parse_permutation("9, 1", 3) == [1, 0, 2]
+
+
+def test_plan_batches_empty_input():
+    plan = plan_batches([], prefix_tokens=10, context_window=100,
+                        max_output_tokens=4)
+    assert plan.batches == [] and plan.est_tokens == []
+
+
+def test_plan_batches_max_batch_one():
+    plan = plan_batches([5, 5, 5], prefix_tokens=0, context_window=1000,
+                        max_output_tokens=2, max_batch=1)
+    assert plan.batches == [[0], [1], [2]]
+
+
+def test_plan_batches_oversized_singleton_isolated():
+    # a tuple bigger than the budget still gets its own batch (the
+    # adaptive runner turns it into NULL at execution time)
+    plan = plan_batches([500, 5], prefix_tokens=10, context_window=100,
+                        max_output_tokens=4)
+    assert plan.batches[0] == [0]
+    assert all(i in [j for b in plan.batches for j in b] for i in (0, 1))
+
+
+def test_run_adaptive_overflow_shrink_path():
+    calls = []
+
+    def call(batch):
+        calls.append(list(batch))
+        if len(batch) > 2:
+            raise ContextOverflowError("too big")
+        return [f"v{i}" for i in batch]
+
+    results, stats = run_adaptive(list(range(10)), [1] * 10,
+                                  prefix_tokens=0, context_window=10_000,
+                                  max_output_tokens=1, call=call)
+    assert results == [f"v{i}" for i in range(10)]
+    assert stats.retries > 0 and stats.nulls == 0
+    assert all(len(b) <= 2 for b in calls[-stats.requests:])
+
+
+def test_run_adaptive_single_tuple_overflow_is_null():
+    def call(batch):
+        raise ContextOverflowError("always")
+
+    results, stats = run_adaptive([0], [1], prefix_tokens=0,
+                                  context_window=10, max_output_tokens=1,
+                                  call=call)
+    assert results == [None]
+    assert stats.nulls == 1

@@ -22,6 +22,7 @@ def _oracle(cfg, params, prompt, n_new, cache_len=64):
     return toks
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["olmo-1b", "falcon-mamba-7b",
                                   "recurrentgemma-9b"])
 def test_engine_matches_oracle(arch, rng):

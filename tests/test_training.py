@@ -31,6 +31,7 @@ def test_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     cfg = get_smoke_config("olmo-1b").replace(remat=False)
     data = SyntheticTokenPipeline(DataConfig(cfg.vocab_size, 16, 8))
@@ -74,6 +75,7 @@ def test_checkpoint_atomicity(tmp_path):
     np.testing.assert_array_equal(out["x"], np.ones(2))
 
 
+@pytest.mark.slow
 def test_fault_tolerance_resume_is_bitwise(tmp_path):
     """Kill at step 7, resume -> same final loss as the uninterrupted run."""
     args = ["--arch", "olmo-1b", "--smoke", "--steps", "12",
