@@ -10,6 +10,9 @@ reproduced here:
   * §2.3 batching: "48x for embedding functions"
     -> bench_batching_embedding
   * §2.3 caching / dedup -> bench_caching, bench_dedup
+  * async provider scheduler -> bench_scheduler (wall-clock vs
+    max_concurrency on a latency-simulating MockProvider; emits
+    machine-readable BENCH_scheduler.json next to this file)
   * Query 3 hybrid search -> bench_hybrid_search
   * serving engine -> bench_continuous_batching
   * kernels -> bench_kernel_* (interpret-mode correctness-path timing; the
@@ -18,8 +21,11 @@ reproduced here:
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -156,6 +162,78 @@ def bench_optimizer():
     _row("optimizer_reduction", 0.0,
          f"requests={req_n/max(req_o,1):.1f}x tokens={tok_n/max(tok_o,1):.1f}x")
     return req_n / max(req_o, 1)
+
+
+def bench_scheduler():
+    """Async provider scheduler: wall-clock vs max_concurrency on a
+    multi-node plan over a latency-simulating MockProvider.  Results,
+    request counts and token counts must be identical to the serial
+    path — only the wall-clock may change (near-linearly with the
+    concurrency limit, until the batch count per node caps the overlap).
+    """
+    from repro.core import MockProvider, RequestScheduler, SemanticContext
+    from repro.engine import Pipeline, Table
+
+    # 50 ms per request keeps dispatch overhead a small fraction of the
+    # measured time, so the >=3x gate at concurrency 4 has real headroom
+    # (ideal is 4x; thread wakeup costs eat ~1-3 ms per request)
+    latency = 0.05
+    n = 72
+    table = Table({
+        "text": [f"review number {i} with a moderately sized body of "
+                 f"text to fill the context window" for i in range(n)],
+    })
+    # small window -> ~8 batches per node; 3 independent map nodes
+    base = {"model": "m", "context_window": 700, "max_output_tokens": 8}
+
+    def run(concurrency):
+        sched = (RequestScheduler() if concurrency else None)
+        model = dict(base, max_concurrency=concurrency or 1)
+        ctx = SemanticContext(provider=MockProvider(
+            latency_per_call_s=latency), scheduler=sched,
+            enable_cache=False, enable_dedup=False)
+        pipe = (Pipeline(ctx, table, "reviews")
+                .llm_complete("summary", model, {"prompt": "summarize"},
+                              ["text"])
+                .llm_complete("topic", model, {"prompt": "name the topic"},
+                              ["text"])
+                .llm_complete_json("meta", model, {"prompt": "extract"},
+                                   ["text"]))
+        t0 = time.perf_counter()
+        out = pipe.collect(optimize=False)
+        dt = time.perf_counter() - t0
+        if sched is not None:
+            sched.shutdown()
+        return (dt, out.rows(), ctx.provider.stats.calls,
+                ctx.provider.stats.prompt_tokens)
+
+    t_sync, rows_sync, req_sync, tok_sync = run(None)
+    results = {"latency_per_call_s": latency, "rows": n, "nodes": 3,
+               "sync": {"wall_s": round(t_sync, 4), "requests": req_sync,
+                        "prompt_tokens": tok_sync}}
+    for c in (1, 4, 16):
+        dt, rows, req, tok = run(c)
+        assert rows == rows_sync, "scheduled results differ from serial"
+        assert (req, tok) == (req_sync, tok_sync), \
+            f"request/token counts changed at concurrency {c}: " \
+            f"{(req, tok)} != {(req_sync, tok_sync)}"
+        results[f"concurrency_{c}"] = {
+            "wall_s": round(dt, 4), "requests": req,
+            "prompt_tokens": tok, "speedup": round(t_sync / dt, 2)}
+        _row(f"scheduler_c{c}", dt * 1e6 / n,
+             f"speedup={t_sync/dt:.1f}x requests={req}")
+    speedup4 = results["concurrency_4"]["speedup"]
+    out_path = Path(__file__).resolve().parent / "BENCH_scheduler.json"
+    out_path.write_text(json.dumps(results, indent=1))
+    # BENCH_SCHEDULER_MIN_SPEEDUP relaxes the gate on oversubscribed CI
+    # runners where thread wakeups stretch past the simulated latency
+    floor = float(os.environ.get("BENCH_SCHEDULER_MIN_SPEEDUP", "3.0"))
+    assert speedup4 >= floor, \
+        f"expected >={floor}x wall-clock reduction at max_concurrency=4, " \
+        f"got {speedup4:.1f}x"
+    _row("scheduler_sync", t_sync * 1e6 / n,
+         f"requests={req_sync} json={out_path.name}")
+    return speedup4
 
 
 def bench_caching():
@@ -299,19 +377,34 @@ def bench_kernels():
     _row("kernel_topk_sim_interp", dt * 1e6, "N4096_D64_k16")
 
 
-def main() -> None:
+_ALL_BENCHES = {
+    "batching_chat_api": bench_batching_chat_api,
+    "optimizer": bench_optimizer,
+    "scheduler": bench_scheduler,
+    "caching": bench_caching,
+    "dedup": bench_dedup,
+    "fusion_methods": bench_fusion_methods,
+    "hybrid_search": bench_hybrid_search,
+    "batching_chat_local": bench_batching_chat_local,
+    "batching_embedding": bench_batching_embedding,
+    "continuous_batching": bench_continuous_batching,
+    "train_step": bench_train_step,
+    "kernels": bench_kernels,
+}
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Run all benches, or only those named on the command line
+    (``python benchmarks/run.py scheduler optimizer``)."""
+    names = list(argv if argv is not None else sys.argv[1:])
+    unknown = [n for n in names if n not in _ALL_BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; "
+                         f"choose from {sorted(_ALL_BENCHES)}")
     print("name,us_per_call,derived")
-    bench_batching_chat_api()
-    bench_optimizer()
-    bench_caching()
-    bench_dedup()
-    bench_fusion_methods()
-    bench_hybrid_search()
-    bench_batching_chat_local()
-    bench_batching_embedding()
-    bench_continuous_batching()
-    bench_train_step()
-    bench_kernels()
+    for name, fn in _ALL_BENCHES.items():
+        if not names or name in names:
+            fn()
 
 
 if __name__ == "__main__":

@@ -82,7 +82,7 @@ def main():
     print("\nafter llm_rerank('mentions cyclic joins'):")
     for rank, p in enumerate(perm):
         print(f"  {rank + 1}. {PASSAGES[top10[p]]}")
-    print("\nprovider stats:", vars(ctx.provider.stats))
+    print("\nprovider stats:", ctx.provider.stats.snapshot())
 
 
 if __name__ == "__main__":

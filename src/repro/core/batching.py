@@ -65,28 +65,13 @@ def run_adaptive(tuples: Sequence, token_costs: Sequence[int],
                  call: Callable[[List[int]], list],
                  max_batch: int = 0) -> tuple[list, BatchStats]:
     """Execute ``call(indices) -> per-index results`` under the adaptive
-    protocol.  Returns (results aligned to tuples, stats)."""
-    results: list = [None] * len(tuples)
-    stats = BatchStats()
-    plan = plan_batches(token_costs, prefix_tokens, context_window,
-                        max_output_tokens, max_batch)
-    work = list(plan.batches)
-    while work:
-        batch = work.pop(0)
-        try:
-            out = call(batch)
-            stats.requests += 1
-            stats.batch_sizes.append(len(batch))
-            for idx, val in zip(batch, out):
-                results[idx] = val
-        except ContextOverflowError:
-            stats.retries += 1
-            if len(batch) == 1:
-                results[batch[0]] = None       # single tuple too large
-                stats.nulls += 1
-                continue
-            # shrink by 10% (at least one element) and retry
-            keep = max(1, len(batch) - max(1, len(batch) // 10))
-            work.insert(0, batch[keep:])
-            work.insert(0, batch[:keep])
-    return results, stats
+    protocol.  Returns (results aligned to tuples, stats).
+
+    Compatibility alias: the executor itself lives in ``scheduler.py``
+    (``execute_serial`` — the ``scheduler=None`` path; the concurrent
+    dispatch engine shares its split-and-requeue logic).  This module
+    keeps only the pure planner (``plan_batches``)."""
+    from .scheduler import execute_serial
+    return execute_serial(tuples, token_costs, prefix_tokens,
+                          context_window, max_output_tokens, call,
+                          max_batch)

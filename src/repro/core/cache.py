@@ -26,6 +26,10 @@ def cache_key(model_ref: str, prompt_key: str, function: str,
     return h.hexdigest()
 
 
+# once the JSONL holds this many superseded lines, put() compacts in place
+_COMPACT_MIN_LINES = 4096
+
+
 class PredictionCache:
     def __init__(self, capacity: int = 100_000,
                  persist_path: Optional[str] = None):
@@ -34,6 +38,7 @@ class PredictionCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self._persisted_lines = 0
         self._persist_path = Path(persist_path) if persist_path else None
         if self._persist_path and self._persist_path.exists():
             self._load()
@@ -47,24 +52,60 @@ class PredictionCache:
             self.misses += 1
             return False, None
 
+    def peek(self, key: str):
+        """Lookup without touching LRU order or hit/miss counters (the
+        scheduler's single-flight re-check uses this so its second look
+        does not distort the session's cache statistics)."""
+        with self._lock:
+            if key in self._data:
+                return True, self._data[key]
+            return False, None
+
+    @property
+    def persist_path(self) -> Optional[Path]:
+        return self._persist_path
+
     def put(self, key: str, value):
         with self._lock:
+            noop = key in self._data and self._data[key] == value
             self._data[key] = value
             self._data.move_to_end(key)
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
-        if self._persist_path:
-            with self._lock:
+            if noop:
+                return       # re-put of an identical entry: no disk append
+            self._persisted_lines += 1
+            do_compact = (self._persist_path is not None
+                          and self._persisted_lines
+                          > max(_COMPACT_MIN_LINES, 2 * len(self._data)))
+            if self._persist_path:
                 with self._persist_path.open("a") as f:
                     f.write(json.dumps({"k": key, "v": value}) + "\n")
+        if do_compact:
+            self.compact()
+
+    def compact(self):
+        """Rewrite the persistence file from the live LRU contents,
+        dropping superseded/evicted lines accumulated by appends."""
+        if not self._persist_path:
+            return
+        with self._lock:
+            tmp = self._persist_path.with_suffix(".tmp")
+            with tmp.open("w") as f:
+                for k, v in self._data.items():
+                    f.write(json.dumps({"k": k, "v": v}) + "\n")
+            tmp.replace(self._persist_path)
+            self._persisted_lines = len(self._data)
 
     def _load(self):
-        for line in self._persist_path.read_text().splitlines():
+        lines = self._persist_path.read_text().splitlines()
+        for line in lines:
             try:
                 rec = json.loads(line)
                 self._data[rec["k"]] = rec["v"]
             except (json.JSONDecodeError, KeyError):
                 continue
+        self._persisted_lines = len(lines)
         while len(self._data) > self.capacity:
             self._data.popitem(last=False)
 
@@ -77,3 +118,57 @@ class PredictionCache:
         with self._lock:
             self._data.clear()
             self.hits = self.misses = 0
+
+
+class SelectivityStore:
+    """JSON sidecar persisting per-prompt ``llm_filter`` pass rates.
+
+    Lives alongside the prediction cache (default path: the cache's
+    JSONL path + ``.selectivity.json``) so cost-ordered filter chains
+    have real statistics on first sight of a recurring prompt across
+    sessions.  Entries are keyed by the prompt's cache identity
+    (``name@version`` for catalog prompts, ``inline:<text>`` otherwise),
+    so a prompt or model re-version naturally orphans old entries;
+    ``prune_stale`` additionally drops versioned keys that a catalog
+    resolves to a *newer* ref, keeping the sidecar from growing with
+    dead versions."""
+
+    def __init__(self, path: str):
+        self.path = Path(path)
+        self._lock = threading.Lock()
+
+    def load(self) -> dict[str, list]:
+        if not self.path.exists():
+            return {}
+        try:
+            data = json.loads(self.path.read_text())
+        except (json.JSONDecodeError, OSError):
+            return {}
+        out: dict[str, list] = {}
+        for pid, obs in data.get("stats", {}).items():
+            if (isinstance(obs, list) and len(obs) == 2
+                    and all(isinstance(x, int) and x >= 0 for x in obs)
+                    and obs[0] <= obs[1]):
+                out[pid] = [obs[0], obs[1]]
+        return out
+
+    def save(self, stats: dict[str, list]):
+        with self._lock:
+            tmp = self.path.with_suffix(".tmp")
+            tmp.write_text(json.dumps({"stats": stats}, indent=1))
+            tmp.replace(self.path)
+
+    @staticmethod
+    def prune_stale(stats: dict[str, list], catalog) -> dict[str, list]:
+        """Drop entries whose ``name@version`` key is superseded by a
+        newer prompt version in ``catalog`` (re-versioned prompts start
+        from fresh statistics)."""
+        out = {}
+        for pid, obs in stats.items():
+            name, sep, _ = pid.rpartition("@")
+            if sep and not pid.startswith("inline:"):
+                live = catalog.get_prompt(name)
+                if live is not None and live.ref != pid:
+                    continue
+            out[pid] = obs
+        return out

@@ -1,5 +1,5 @@
-"""Semantic scalar & aggregate functions (paper Table 1) + the optimizer
-pipeline that backs them: dedup -> cache -> adaptive batching -> provider.
+"""Semantic scalar & aggregate functions (paper Table 1) + the staged
+execution path that backs them: dedup -> cache -> batch-plan -> dispatch.
 
 Scalar (map) functions — one output per input tuple:
     llm_complete, llm_complete_json, llm_filter, llm_embedding
@@ -10,23 +10,30 @@ plus ``fusion`` (see fusion.py) for hybrid-search score combination.
 Every function takes ``{'model_name': ...}``-style model/prompt argument
 dicts like FlockMTL: either a registered resource name (+optional @version)
 or an inline spec, so SQL pipelines stay fixed while admins swap resources.
+
+The dispatch stage has two modes: with ``SemanticContext(scheduler=...)``
+batch requests go to the concurrent ``RequestScheduler`` (overlapped
+in-flight requests, single-flight key dedup); with ``scheduler=None``
+they run through the serial adaptive loop — same batches, same results.
 """
 
 from __future__ import annotations
 
 import json
 import re
+import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .batching import run_adaptive
-from .cache import PredictionCache, cache_key
+from .cache import PredictionCache, SelectivityStore, cache_key
 from .metaprompt import (build_metaprompt, build_multi_task, build_prefix,
                          serialize_tuple)
 from .provider import BaseProvider, MockProvider, estimate_tokens
 from .resources import Catalog, ModelResource
+from .scheduler import RequestScheduler, execute_serial
 
 
 @dataclass
@@ -44,6 +51,7 @@ class ExecutionReport:
     meta_prompt_prefix: str = ""
     chosen_batch_size: str = "auto"
     selectivity: Optional[float] = None   # filter calls: pass rate
+    coalesced: int = 0    # keys served by another job's in-flight request
 
 
 class SemanticContext:
@@ -54,7 +62,9 @@ class SemanticContext:
                  cache: Optional[PredictionCache] = None,
                  serialization: str = "xml",
                  enable_cache: bool = True, enable_dedup: bool = True,
-                 enable_batching: bool = True, max_batch: int = 0):
+                 enable_batching: bool = True, max_batch: int = 0,
+                 scheduler: Optional[RequestScheduler] = None,
+                 selectivity_path: Optional[str] = None):
         self.catalog = catalog or Catalog()
         self.provider = provider or MockProvider()
         self.cache = cache or PredictionCache()
@@ -63,18 +73,84 @@ class SemanticContext:
         self.enable_dedup = enable_dedup
         self.enable_batching = enable_batching
         self.max_batch = max_batch
+        # concurrent dispatch engine; None = serial (bit-identical) path
+        self.scheduler = scheduler
         self.reports: List[ExecutionReport] = []
+        self._lock = threading.Lock()
+        # selectivity gets its own lock: its save() does file I/O, which
+        # must not stall add_report on concurrently dispatched map nodes
+        self._sel_lock = threading.Lock()
+        self._tl = threading.local()     # per-thread last report
         # per-prompt filter pass-rate observations: prompt_id -> [passed,
         # total].  Feeds the plan optimizer's cost-ordered filter chains.
         self.selectivity_stats: Dict[str, List[int]] = {}
+        # persistence sidecar: survives sessions next to the prediction
+        # cache, so recurring prompts are cost-ordered from real stats
+        if selectivity_path is None and self.cache.persist_path is not None:
+            selectivity_path = str(self.cache.persist_path) \
+                + ".selectivity.json"
+        self.selectivity_store = (SelectivityStore(selectivity_path)
+                                  if selectivity_path else None)
+        # debounce sidecar writes: at most one full-file rewrite per
+        # interval on the hot path; flush_selectivity() forces the rest
+        # (Pipeline.collect() calls it once per plan execution)
+        self._sel_save_interval = 0.5
+        self._sel_last_save = float("-inf")
+        self._sel_dirty = False
+        if self.selectivity_store is not None:
+            loaded = SelectivityStore.prune_stale(
+                self.selectivity_store.load(), self.catalog)
+            self.selectivity_stats.update(loaded)
+
+    # ---- report bookkeeping (thread-safe: nodes may run concurrently) ------
+    def add_report(self, rep: ExecutionReport):
+        with self._lock:
+            self.reports.append(rep)
+            slot = len(self.reports) - 1
+        self._tl.last_report = rep
+        self._tl.last_report_slot = slot
+
+    def last_report(self) -> Optional[ExecutionReport]:
+        """The report appended by the current thread's most recent
+        semantic call (``reports[-1]`` is racy under the scheduler's
+        concurrent node dispatch)."""
+        return getattr(self._tl, "last_report", None)
+
+    def last_report_slot(self) -> Optional[int]:
+        """Index of ``last_report()`` in ``reports`` — recorded at
+        append time so plan bookkeeping stays O(1) on long-lived
+        contexts."""
+        return getattr(self._tl, "last_report_slot", None)
 
     # ---- selectivity bookkeeping (filter reordering) -----------------------
     def record_selectivity(self, prompt_id: str, passed: int, total: int):
         if total <= 0:
             return
-        s = self.selectivity_stats.setdefault(prompt_id, [0, 0])
-        s[0] += passed
-        s[1] += total
+        # snapshot + save stay under one lock: concurrent filter nodes
+        # saving stale snapshots out of order would lose observations
+        with self._sel_lock:
+            s = self.selectivity_stats.setdefault(prompt_id, [0, 0])
+            s[0] += passed
+            s[1] += total
+            self._sel_dirty = True
+            self._save_selectivity_locked()
+
+    def flush_selectivity(self):
+        """Persist any selectivity observations the debounce deferred."""
+        with self._sel_lock:
+            self._save_selectivity_locked(force=True)
+
+    def _save_selectivity_locked(self, force: bool = False):
+        if self.selectivity_store is None or not self._sel_dirty:
+            return
+        now = time.monotonic()
+        if not force and now - self._sel_last_save < \
+                self._sel_save_interval:
+            return
+        self.selectivity_store.save(
+            {k: list(v) for k, v in self.selectivity_stats.items()})
+        self._sel_last_save = now
+        self._sel_dirty = False
 
     def expected_selectivity(self, prompt_id: str,
                              default: float = 0.5) -> float:
@@ -95,7 +171,8 @@ class SemanticContext:
             arch=spec.get("arch", "mock"),
             context_window=int(spec.get("context_window", 4096)),
             max_output_tokens=int(spec.get("max_output_tokens", 32)),
-            embedding_dim=int(spec.get("embedding_dim", 0)))
+            embedding_dim=int(spec.get("embedding_dim", 0)),
+            max_concurrency=int(spec.get("max_concurrency", 4)))
 
     def resolve_prompt(self, spec: Dict[str, Any]) -> tuple[str, str]:
         """Returns (prompt_text, cache_identity)."""
@@ -109,7 +186,7 @@ class SemanticContext:
 
 
 # ---------------------------------------------------------------------------
-# map-function core: dedup -> cache -> batch -> provider
+# map-function core, staged: dedup -> cache -> batch-plan -> dispatch
 # ---------------------------------------------------------------------------
 _LINE_RE = re.compile(r"^\s*(\d+)\s*:\s*(.*)$")
 
@@ -130,51 +207,99 @@ def _map_function(ctx: SemanticContext, kind: str, model_spec, prompt_spec,
     return _map_core(ctx, kind, model, prompt_text, prompt_id, tuples)
 
 
+def _dedup_stage(ctx: SemanticContext, ser: Sequence[str]
+                 ) -> tuple[List[str], List[int], List[int]]:
+    """Stage 1 — predict only over distinct serialized inputs.
+
+    Returns (order, first_idx, back): the distinct payloads in first-seen
+    order, the original index carrying each, and the back-mapping from
+    original positions to distinct positions."""
+    if not ctx.enable_dedup:
+        idx = list(range(len(ser)))
+        return list(ser), idx, idx
+    uniq: Dict[str, int] = {}
+    order: List[str] = []
+    first_idx: List[int] = []
+    for i, s in enumerate(ser):
+        if s not in uniq:
+            uniq[s] = len(order)
+            order.append(s)
+            first_idx.append(i)
+    return order, first_idx, [uniq[s] for s in ser]
+
+
+def _cache_stage(ctx: SemanticContext, keys: Sequence[str],
+                 rep: ExecutionReport
+                 ) -> tuple[List[Optional[Any]], List[int]]:
+    """Stage 2 — fill from the prediction cache; return the result slots
+    plus the positions still needing a provider request."""
+    results: List[Optional[Any]] = [None] * len(keys)
+    todo: List[int] = []
+    if not ctx.enable_cache:
+        return results, list(range(len(keys)))
+    for i, k in enumerate(keys):
+        hit, val = ctx.cache.get(k)
+        if hit:
+            results[i] = val
+            rep.cache_hits += 1
+        else:
+            todo.append(i)
+    return results, todo
+
+
+def _dispatch_stage(ctx: SemanticContext, model: ModelResource,
+                    todo: List[int], keys: Sequence[str],
+                    costs: List[int], prefix_tokens: int, call,
+                    rep: ExecutionReport) -> list:
+    """Stage 3 — run the misses: batch-plan, then either hand the batches
+    to the concurrent scheduler (overlapped per-model in-flight requests,
+    single-flight key dedup, overflow split-and-requeue inside the
+    engine) or fall back to the serial adaptive loop.  Both paths see
+    identical batch plans and produce identical results and counts."""
+    mb = ctx.max_batch if ctx.enable_batching else 1
+    window = (model.context_window if ctx.enable_batching
+              else prefix_tokens + max(costs) + model.max_output_tokens + 1)
+    if ctx.scheduler is not None:
+        job = ctx.scheduler.submit_map(
+            model, [keys[i] for i in todo], costs, prefix_tokens, call,
+            cache=ctx.cache if ctx.enable_cache else None,
+            max_batch=mb, context_window=window,
+            single_flight=ctx.enable_cache)
+        out, stats = job.result()
+        rep.coalesced = job.coalesced
+        rep.cache_hits += job.late_hits
+    else:
+        out, stats = execute_serial(todo, costs, prefix_tokens, window,
+                                    model.max_output_tokens, call,
+                                    max_batch=mb)
+        if ctx.enable_cache:
+            for j, i in enumerate(todo):
+                if out[j] is not None:
+                    ctx.cache.put(keys[i], out[j])
+    rep.requests, rep.retries, rep.nulls = (stats.requests, stats.retries,
+                                            stats.nulls)
+    rep.batch_sizes = stats.batch_sizes
+    return out
+
+
 def _map_core(ctx: SemanticContext, kind: str, model: ModelResource,
               prompt_text: str, prompt_id: str,
               tuples: Sequence[dict]) -> List[Optional[str]]:
     rep = ExecutionReport(function=kind, n_tuples=len(tuples),
                           serialization=ctx.serialization)
-    ctx.reports.append(rep)
+    ctx.add_report(rep)
     if not tuples:
         return []
 
-    # ---- dedup: predict only over distinct serialized inputs --------------
     ser = [serialize_tuple(t, ctx.serialization) for t in tuples]
-    if ctx.enable_dedup:
-        uniq: Dict[str, int] = {}
-        order: List[str] = []
-        first_idx: List[int] = []
-        for i, s in enumerate(ser):
-            if s not in uniq:
-                uniq[s] = len(order)
-                order.append(s)
-                first_idx.append(i)
-        back = [uniq[s] for s in ser]
-    else:
-        order = list(ser)
-        first_idx = list(range(len(ser)))
-        back = list(range(len(ser)))
+    order, first_idx, back = _dedup_stage(ctx, ser)
     rep.n_unique = len(order)
     uniq_tuples = [tuples[i] for i in first_idx]
 
-    # ---- cache lookup ------------------------------------------------------
-    results: List[Optional[str]] = [None] * len(order)
-    todo: List[int] = []
     keys = [cache_key(model.ref, prompt_id, kind, ctx.serialization, s)
             for s in order]
-    if ctx.enable_cache:
-        for i, k in enumerate(keys):
-            hit, val = ctx.cache.get(k)
-            if hit:
-                results[i] = val
-                rep.cache_hits += 1
-            else:
-                todo.append(i)
-    else:
-        todo = list(range(len(order)))
+    results, todo = _cache_stage(ctx, keys, rep)
 
-    # ---- adaptive batching over the misses ---------------------------------
     if todo:
         prefix = build_prefix(kind, prompt_text, ctx.serialization)
         prefix_tokens = estimate_tokens(prefix)
@@ -187,19 +312,10 @@ def _map_core(ctx: SemanticContext, kind: str, model: ModelResource,
             raw = ctx.provider.complete(model, mp, len(rows))
             return _parse_rows(raw, len(rows))
 
-        mb = ctx.max_batch if ctx.enable_batching else 1
-        out, stats = run_adaptive(
-            todo, costs, prefix_tokens,
-            model.context_window if ctx.enable_batching
-            else prefix_tokens + max(costs) + model.max_output_tokens + 1,
-            model.max_output_tokens, call, max_batch=mb)
-        rep.requests, rep.retries, rep.nulls = (stats.requests,
-                                                stats.retries, stats.nulls)
-        rep.batch_sizes = stats.batch_sizes
+        out = _dispatch_stage(ctx, model, todo, keys, costs, prefix_tokens,
+                              call, rep)
         for j, i in enumerate(todo):
             results[i] = out[j]
-            if ctx.enable_cache and out[j] is not None:
-                ctx.cache.put(keys[i], out[j])
 
     return [results[b] for b in back]
 
@@ -232,9 +348,9 @@ def llm_filter(ctx, model_spec, prompt_spec, tuples) -> List[bool]:
             for r in raw]
     _, prompt_id = ctx.resolve_prompt(prompt_spec)
     ctx.record_selectivity(prompt_id, sum(mask), len(mask))
-    if ctx.reports:
-        ctx.reports[-1].selectivity = (sum(mask) / len(mask)
-                                       if mask else None)
+    rep = ctx.last_report()
+    if rep is not None:
+        rep.selectivity = sum(mask) / len(mask) if mask else None
     return mask
 
 
@@ -303,50 +419,55 @@ def llm_multi(ctx, model_spec, subtasks: Sequence[dict],
 
 
 def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
-    """Embedding with dedup + cache (no prompt; paper: 48x from batching)."""
+    """Embedding with dedup + cache (no prompt; paper: 48x from batching).
+
+    Shares the staged path: dedup -> cache -> dispatch; with a scheduler
+    the embed batches ride the same concurrent engine (and single-flight
+    registry) as the chat-completion map functions."""
     model = ctx.resolve_model(model_spec)
     rep = ExecutionReport(function="embedding", n_tuples=len(tuples),
                           serialization=ctx.serialization)
-    ctx.reports.append(rep)
+    ctx.add_report(rep)
     texts = [serialize_tuple(t, ctx.serialization) if isinstance(t, dict)
              else str(t) for t in tuples]
-    uniq: Dict[str, int] = {}
-    order: List[str] = []
-    for t in texts:
-        if ctx.enable_dedup:
-            if t not in uniq:
-                uniq[t] = len(order)
-                order.append(t)
-        else:
-            uniq[t + f"#{len(order)}"] = len(order)
-            order.append(t)
-    back = ([uniq[t] for t in texts] if ctx.enable_dedup
-            else list(range(len(texts))))
+    order, _, back = _dedup_stage(ctx, texts)
     rep.n_unique = len(order)
     keys = [cache_key(model.ref, "", "embedding", "raw", t) for t in order]
-    vecs: List[Optional[list]] = [None] * len(order)
-    todo = []
-    for i, k in enumerate(keys):
-        if ctx.enable_cache:
-            hit, val = ctx.cache.get(k)
-            if hit:
-                vecs[i] = val
-                rep.cache_hits += 1
-                continue
-        todo.append(i)
+    vecs, todo = _cache_stage(ctx, keys, rep)
     if todo:
+        # positions index into ``todo`` (the scheduler contract)
         if ctx.enable_batching:
-            batches = [todo]
+            batches = [list(range(len(todo)))]
         else:
-            batches = [[i] for i in todo]
-        for b in batches:
-            em = ctx.provider.embed(model, [order[i] for i in b])
-            rep.requests += 1
-            rep.batch_sizes.append(len(b))
-            for j, i in enumerate(b):
-                vecs[i] = em[j].tolist()
-                if ctx.enable_cache:
-                    ctx.cache.put(keys[i], vecs[i])
+            batches = [[j] for j in range(len(todo))]
+
+        def run(positions: List[int]) -> List[list]:
+            em = ctx.provider.embed(model,
+                                    [order[todo[p]] for p in positions])
+            return [em[j].tolist() for j in range(len(positions))]
+
+        if ctx.scheduler is not None:
+            job = ctx.scheduler.submit(
+                model, [keys[i] for i in todo], run, batches,
+                cache=ctx.cache if ctx.enable_cache else None,
+                single_flight=ctx.enable_cache)
+            out, stats = job.result()
+            rep.coalesced = job.coalesced
+            rep.cache_hits += job.late_hits
+            rep.requests, rep.batch_sizes = stats.requests, \
+                stats.batch_sizes
+        else:
+            out = [None] * len(todo)
+            for b in batches:
+                em = run(b)
+                rep.requests += 1
+                rep.batch_sizes.append(len(b))
+                for j, p in enumerate(b):
+                    out[p] = em[j]
+                    if ctx.enable_cache:
+                        ctx.cache.put(keys[todo[p]], em[j])
+        for j, i in enumerate(todo):
+            vecs[i] = out[j]
     return np.asarray([vecs[b] for b in back], np.float32)
 
 

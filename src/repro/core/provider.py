@@ -21,6 +21,7 @@ from __future__ import annotations
 import hashlib
 import json
 import re
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
@@ -40,10 +41,32 @@ def estimate_tokens(text: str) -> int:
 
 @dataclass
 class ProviderStats:
+    """Aggregate provider counters.  The scheduler executes requests from
+    a thread pool, so every mutation goes through ``add`` (one lock per
+    provider); bare ``+=`` on the fields from worker threads would drop
+    updates under concurrency."""
     calls: int = 0
     prompt_tokens: int = 0
     output_tokens: int = 0
     latency_s: float = 0.0
+
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def add(self, calls: int = 0, prompt_tokens: int = 0,
+            output_tokens: int = 0, latency_s: float = 0.0):
+        with self._lock:
+            self.calls += calls
+            self.prompt_tokens += prompt_tokens
+            self.output_tokens += output_tokens
+            self.latency_s += latency_s
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"calls": self.calls,
+                    "prompt_tokens": self.prompt_tokens,
+                    "output_tokens": self.output_tokens,
+                    "latency_s": self.latency_s}
 
 
 class BaseProvider:
@@ -153,10 +176,9 @@ class MockProvider(BaseProvider):
             estimate_tokens(mp.text) + model.max_output_tokens * n_rows)
         if sim:
             time.sleep(min(sim, 1.0))
-        self.stats.calls += 1
-        self.stats.prompt_tokens += estimate_tokens(mp.text)
-        self.stats.output_tokens += sum(estimate_tokens(o) for o in out)
-        self.stats.latency_s += time.time() - t0
+        self.stats.add(calls=1, prompt_tokens=estimate_tokens(mp.text),
+                       output_tokens=sum(estimate_tokens(o) for o in out),
+                       latency_s=time.time() - t0)
         return out
 
     def embed(self, model, texts):
@@ -166,7 +188,7 @@ class MockProvider(BaseProvider):
             rng = np.random.default_rng(self._h(t) % (2 ** 32))
             v = rng.standard_normal(dim)
             out[i] = v / np.linalg.norm(v)
-        self.stats.calls += 1
+        self.stats.add(calls=1)
         return out
 
 
@@ -188,6 +210,11 @@ class LocalJaxProvider(BaseProvider):
                else get_config(arch))
         self.engine = ServingEngine(cfg, checkpoint=checkpoint,
                                     max_context=max_context)
+        # the serving engine mutates shared decode state (slots, pos, KV
+        # cache); scheduler worker threads must take turns.  Concurrency
+        # for this provider comes from the engine's own continuous
+        # batching, not from overlapped calls.
+        self._engine_lock = threading.Lock()
 
     @staticmethod
     def _tokenize(text: str, vocab: int) -> list[int]:
@@ -203,12 +230,12 @@ class LocalJaxProvider(BaseProvider):
         vocab = self.engine.cfg.vocab_size
         prompt = self._tokenize(mp.text, vocab)
         max_new = min(model.max_output_tokens * max(n_rows, 1), 64)
-        toks = self.engine.generate(prompt, max_new_tokens=max_new)
+        with self._engine_lock:
+            toks = self.engine.generate(prompt, max_new_tokens=max_new)
         text = self._detokenize(toks)
-        self.stats.calls += 1
-        self.stats.prompt_tokens += len(prompt)
-        self.stats.output_tokens += len(toks)
-        self.stats.latency_s += time.time() - t0
+        self.stats.add(calls=1, prompt_tokens=len(prompt),
+                       output_tokens=len(toks),
+                       latency_s=time.time() - t0)
         # random weights produce uninterpretable bytes; wrap them in the
         # contract shape so downstream parsing stays exercised end-to-end
         return [f"{i}: {text[:32]!r}" for i in range(n_rows)] \
@@ -218,7 +245,8 @@ class LocalJaxProvider(BaseProvider):
 
     def embed(self, model, texts):
         vocab = self.engine.cfg.vocab_size
-        out = self.engine.embed_batch(
-            [self._tokenize(t, vocab) for t in texts])
-        self.stats.calls += 1
+        with self._engine_lock:
+            out = self.engine.embed_batch(
+                [self._tokenize(t, vocab) for t in texts])
+        self.stats.add(calls=1)
         return out

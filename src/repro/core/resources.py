@@ -40,6 +40,7 @@ class ModelResource:
     max_output_tokens: int = 256
     temperature: float = 0.0
     embedding_dim: int = 0          # 0 -> arch d_model
+    max_concurrency: int = 4        # scheduler: in-flight request cap
     scope: str = "local"
     created_at: float = 0.0
     deleted: bool = False

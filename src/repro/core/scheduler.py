@@ -1,0 +1,479 @@
+"""Async provider scheduler: staged, concurrent dispatch of LLM requests.
+
+PR 1's optimizer cut *how many* requests a plan issues (batching, caching,
+dedup, fusion); this module cuts *how long* they take.  The monolithic
+``dedup -> cache -> batch -> provider`` loop becomes explicit stages, and
+the provider stage runs on a bounded worker pool so wall-clock tracks the
+provider's concurrency limit instead of the batch count — the DBMS, not
+the user, hides provider latency behind concurrent in-flight requests
+(arXiv:2508.20912 §3, arXiv:2402.02643 §4).
+
+Pieces:
+
+  * ``RequestScheduler`` — one per ``SemanticContext`` (opt-in via the
+    ``scheduler=`` knob; ``None`` keeps the serial path bit-identical).
+    Owns a thread pool sized ``max_workers`` and a per-model semaphore
+    honouring ``ModelResource.max_concurrency``.
+  * dispatch queue — any number of plan nodes submit batch-request jobs
+    concurrently; batches from different jobs interleave freely on the
+    pool, so independent plan nodes overlap end-to-end.
+  * single-flight dedup — identical cache keys submitted by concurrent
+    jobs issue ONE provider request; late submitters attach to the
+    in-flight entry and read its value when it resolves.
+  * adaptive overflow — ``ContextOverflowError`` splits the batch 10%
+    (the paper §2.3 protocol) and requeues both halves on the pool; a
+    single tuple that still overflows resolves to NULL.  The same split
+    loop drives the serial fallback (``execute_serial``), so the two
+    paths produce identical results, request counts and token counts —
+    with one stats-only exception: a borrower of an overflow-NULLed key
+    adopts the NULL (counted in its ``nulls``) instead of re-issuing a
+    request that would fail identically, so its request/retry counts
+    can undercut a strictly serial run of that pathological workload.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .batching import BatchStats, ContextOverflowError, plan_batches
+from .resources import ModelResource
+
+
+def split_batch(batch: List[int]) -> tuple[List[int], List[int]]:
+    """Adaptive 10% shrink: (head to retry, tail to requeue)."""
+    keep = max(1, len(batch) - max(1, len(batch) // 10))
+    return batch[:keep], batch[keep:]
+
+
+def execute_serial(indices: Sequence, token_costs: Sequence[int],
+                   prefix_tokens: int, context_window: int,
+                   max_output_tokens: int,
+                   call: Callable[[List[int]], list],
+                   max_batch: int = 0) -> tuple[list, BatchStats]:
+    """The scheduler-free fallback: plan batches, run them one at a time
+    under the adaptive overflow protocol.  ``call(positions)`` receives
+    positions into ``indices`` and returns per-position results."""
+    results: list = [None] * len(indices)
+    stats = BatchStats()
+    plan = plan_batches(token_costs, prefix_tokens, context_window,
+                        max_output_tokens, max_batch)
+    work = list(plan.batches)
+    while work:
+        batch = work.pop(0)
+        try:
+            out = call(batch)
+            stats.requests += 1
+            stats.batch_sizes.append(len(batch))
+            for idx, val in zip(batch, out):
+                results[idx] = val
+        except ContextOverflowError:
+            stats.retries += 1
+            if len(batch) == 1:
+                results[batch[0]] = None       # single tuple too large
+                stats.nulls += 1
+                continue
+            head, tail = split_batch(batch)
+            work.insert(0, tail)
+            work.insert(0, head)
+    return results, stats
+
+
+# ---------------------------------------------------------------------------
+# single-flight registry
+# ---------------------------------------------------------------------------
+class _InflightEntry:
+    """One in-flight cache key.  The owning job resolves it; borrowing
+    jobs block on the event instead of issuing a duplicate request.  If
+    the owning request errored, borrowers re-raise instead of treating
+    the missing value as a legitimate NULL."""
+    __slots__ = ("event", "value", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.value = None
+        self.error: Optional[BaseException] = None
+
+    def resolve(self, value):
+        self.value = value
+        self.event.set()
+
+    def resolve_error(self, exc: BaseException):
+        self.error = exc
+        self.event.set()
+
+
+class _ModelGate:
+    """Admission gate bounding one model's in-flight requests.
+
+    Non-blocking by design: a batch that cannot enter is parked on the
+    gate's pending queue and handed back when a slot frees, so pool
+    threads never sleep waiting for a busy model — one low-concurrency
+    model with a deep queue cannot starve other models' jobs out of the
+    worker pool.
+
+    Unlike a plain semaphore the limit can shrink after creation: when
+    the same model resource is resolved with different
+    ``max_concurrency`` values, the most restrictive one wins (exceeding
+    the smallest advertised cap is never safe against a rate-limited
+    provider)."""
+
+    def __init__(self, limit: int):
+        self._lock = threading.Lock()
+        self.limit = max(1, limit)
+        self.active = 0
+        self.pending: List = []          # deferred (job, batch) tasks
+
+    def shrink_to(self, limit: int):
+        with self._lock:
+            self.limit = max(1, min(self.limit, limit))
+
+    def try_acquire(self, task) -> bool:
+        """Take a slot, or park ``task`` for redelivery on release."""
+        with self._lock:
+            if self.active < self.limit:
+                self.active += 1
+                return True
+            self.pending.append(task)
+            return False
+
+    def release_and_next(self):
+        """Free the slot; if work is parked, keep the slot and return
+        the next task for the caller to run inline.  A slot is only
+        handed off while ``active`` respects the (possibly shrunk)
+        limit — excess in-flight slots drain instead, so 'most
+        restrictive wins' holds even mid-queue."""
+        with self._lock:
+            if self.pending and self.active <= self.limit:
+                return self.pending.pop(0)
+            self.active -= 1
+            return None
+
+
+@dataclass
+class SchedulerStats:
+    jobs: int = 0
+    requests: int = 0
+    retries: int = 0
+    nulls: int = 0
+    coalesced: int = 0          # keys served by another job's request
+    max_inflight: int = 0       # peak concurrently-executing requests
+
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def add(self, **deltas: int):
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
+
+class DispatchJob:
+    """Future for one submitted batch-request job (one plan-node stage).
+
+    ``result()`` blocks until every owned batch has executed (including
+    overflow requeues) and every borrowed key has been resolved by its
+    owning job, then returns ``(values, stats)`` aligned with the
+    submitted key list.  ``coalesced`` counts borrowed keys."""
+
+    def __init__(self, scheduler: "RequestScheduler", keys: Sequence[str],
+                 run: Callable[[List[int]], list], model: ModelResource,
+                 cache=None):
+        self.scheduler = scheduler
+        self.keys = list(keys)
+        self.run = run
+        self.model = model
+        self.cache = cache
+        self.values: List = [None] * len(self.keys)
+        self.stats = BatchStats()
+        self.coalesced = 0      # keys served by another job's request
+        self.late_hits = 0      # keys found in cache at submit time
+        self._borrowed: List[tuple[int, _InflightEntry]] = []
+        self._owned_entries: Dict[int, _InflightEntry] = {}
+        self._lock = threading.Lock()
+        self._pending = 0
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+
+    # ---- owner-side bookkeeping (called by scheduler workers) -------------
+    def _batch_started(self, n: int = 1):
+        with self._lock:
+            self._pending += n
+
+    def _batch_finished(self):
+        with self._lock:
+            self._pending -= 1
+            if self._pending <= 0:
+                self._done.set()
+
+    def _fail(self, exc: BaseException):
+        with self._lock:
+            self._error = exc
+            self._pending = 0
+            self._done.set()
+        # release owned single-flight entries so borrower jobs waiting on
+        # this job's keys unblock — carrying the error, not a silent None
+        for pos, entry in self._owned_entries.items():
+            if not entry.event.is_set():
+                entry.resolve_error(exc)
+                key = self.keys[pos]
+                with self.scheduler._lock:
+                    if self.scheduler._inflight.get(key) is entry:
+                        del self.scheduler._inflight[key]
+
+    # ---- consumer side ----------------------------------------------------
+    def result(self, timeout: Optional[float] = None
+               ) -> tuple[list, BatchStats]:
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        if not self._done.wait(timeout):
+            raise TimeoutError("scheduler job did not complete in time")
+        if self._error is not None:
+            raise self._error
+        for pos, entry in self._borrowed:
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            if not entry.event.wait(remaining):
+                raise TimeoutError(
+                    "borrowed in-flight key did not resolve in time")
+            if entry.error is not None:
+                raise entry.error
+            self.values[pos] = entry.value
+            if entry.value is None:
+                # the owner overflow-nulled this key; adopt the NULL and
+                # account for it (the serial path would re-issue, fail
+                # the same way, and count a null of its own)
+                self.stats.nulls += 1
+        return self.values, self.stats
+
+
+class RequestScheduler:
+    """Bounded concurrent dispatch engine shared by all plan nodes of a
+    session.  Construct once, pass as ``SemanticContext(scheduler=...)``;
+    ``shutdown()`` (or use as a context manager) drains the pool."""
+
+    def __init__(self, max_workers: int = 16):
+        self.max_workers = max_workers
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="flockjax-sched")
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, _InflightEntry] = {}
+        self._gates: Dict[str, _ModelGate] = {}
+        self._executing = 0
+        self.stats = SchedulerStats()
+
+    # ---- lifecycle ---------------------------------------------------------
+    def shutdown(self, wait: bool = True):
+        self._pool.shutdown(wait=wait)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    # ---- per-model concurrency gate ---------------------------------------
+    def _model_gate(self, model: ModelResource) -> _ModelGate:
+        limit = max(1, int(getattr(model, "max_concurrency", 1) or 1))
+        with self._lock:
+            gate = self._gates.get(model.ref)
+            if gate is None:
+                gate = _ModelGate(limit)
+                self._gates[model.ref] = gate
+            else:
+                gate.shrink_to(limit)
+            return gate
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, model: ModelResource, keys: Sequence[str],
+               run: Callable[[List[int]], list],
+               batches: Optional[Sequence[List[int]]] = None, cache=None,
+               single_flight: bool = True,
+               plan: Optional[Callable[[List[int]],
+                                       List[List[int]]]] = None
+               ) -> DispatchJob:
+        """Enqueue pre-planned ``batches`` (position lists into ``keys``)
+        for concurrent execution.  With ``single_flight``, positions
+        whose key is already in flight (submitted by ANOTHER job) are
+        coalesced instead of re-issued, and positions whose key landed
+        in ``cache`` since the caller's lookup are served from it —
+        exactly the requests a serialized execution would have saved as
+        cache hits, so request counts match the serial path.
+
+        Duplicate keys WITHIN one job never self-coalesce (they only
+        exist with dedup disabled, where the serial path issues every
+        duplicate), and callers that disabled caching must pass
+        ``single_flight=False``: coalescing is an extension of the
+        prediction cache, and without it a borrower would share
+        responses the caller asked to keep independent.
+
+        ``plan`` (owned positions -> batches), when given, re-plans the
+        batches AFTER coalescing so the surviving positions pack densely
+        — filtering borrowed keys out of pre-planned ``batches`` would
+        leave sparse batches and more requests than the serial path."""
+        job = DispatchJob(self, keys, run, model, cache)
+        self.stats.add(jobs=1)
+
+        owned_pos: set[int] = set()
+        if not single_flight:
+            owned_pos = set(range(len(job.keys)))
+        else:
+            # duplicate keys within a job (dedup disabled) inherit the
+            # first occurrence's disposition: borrowed and late-hit
+            # firsts would be cache hits for every duplicate on the
+            # serial path (0 requests), owned firsts would be misses
+            # for every duplicate (all requested) — count parity holds
+            # either way
+            disposition: Dict[str, tuple] = {}
+            with self._lock:
+                for pos, key in enumerate(job.keys):
+                    disp = disposition.get(key)
+                    if disp is None:
+                        entry = self._inflight.get(key)
+                        if entry is not None:
+                            disp = ("borrow", entry)
+                        else:
+                            disp = ("own", None)
+                            if cache is not None:
+                                # landed in the cache since the
+                                # caller's lookup: a late hit, not
+                                # in-flight sharing
+                                hit, val = cache.peek(key)
+                                if hit:
+                                    disp = ("hit", val)
+                            if disp[0] == "own":
+                                entry = _InflightEntry()
+                                self._inflight[key] = entry
+                                job._owned_entries[pos] = entry
+                        disposition[key] = disp
+                    kind, payload = disp
+                    if kind == "borrow":
+                        job._borrowed.append((pos, payload))
+                    elif kind == "hit":
+                        job.values[pos] = payload
+                        job.late_hits += 1
+                    else:
+                        owned_pos.add(pos)
+            if job._borrowed:
+                job.coalesced = len(job._borrowed)
+                self.stats.add(coalesced=len(job._borrowed))
+
+        if plan is not None:
+            owned_batches = plan(sorted(owned_pos)) if owned_pos else []
+        else:
+            owned_batches = [[p for p in b if p in owned_pos]
+                             for b in (batches or [])]
+            owned_batches = [b for b in owned_batches if b]
+        if not owned_batches:
+            job._done.set()
+            return job
+        job._batch_started(len(owned_batches))
+        try:
+            for b in owned_batches:
+                self._pool.submit(self._run_batch, job, b)
+        except BaseException as exc:
+            # e.g. pool already shut down: _fail releases this job's
+            # registered in-flight entries (with the error) so no later
+            # borrower hangs on them, then the caller sees the error
+            job._fail(exc)
+            raise
+        return job
+
+    def submit_map(self, model: ModelResource, keys: Sequence[str],
+                   token_costs: Sequence[int], prefix_tokens: int,
+                   run: Callable[[List[int]], list], cache=None,
+                   max_batch: int = 0,
+                   context_window: Optional[int] = None,
+                   single_flight: bool = True) -> DispatchJob:
+        """Dispatch with context-window batch planning that runs AFTER
+        single-flight coalescing, so the positions this job actually
+        owns pack as densely as a serial execution would."""
+        window = (context_window if context_window is not None
+                  else model.context_window)
+
+        def plan(owned: List[int]) -> List[List[int]]:
+            bp = plan_batches([token_costs[p] for p in owned],
+                              prefix_tokens, window,
+                              model.max_output_tokens, max_batch)
+            return [[owned[j] for j in b] for b in bp.batches]
+
+        return self.submit(model, keys, run, cache=cache,
+                           single_flight=single_flight, plan=plan)
+
+    # ---- worker ------------------------------------------------------------
+    def _run_batch(self, job: DispatchJob, batch: List[int]):
+        """Pool-thread entry: admit the batch through its model gate (or
+        park it — pool threads never block on a busy model, so one
+        low-concurrency model cannot starve other models' jobs), then
+        run it and keep draining parked same-model work inline (the slot
+        hands off without a pool round-trip)."""
+        gate = self._model_gate(job.model)
+        if not gate.try_acquire((job, batch)):
+            return          # parked on the gate; drained on release
+        task = (job, batch)
+        while task is not None:
+            j, b = task
+            # any escape — provider errors, cache-put I/O failures,
+            # requeue after shutdown — fails the job, never strands
+            # result()
+            try:
+                self._execute_admitted(j, b)
+            except BaseException as exc:     # surfaced at result()
+                j._fail(exc)
+            task = gate.release_and_next()
+
+    def _execute_admitted(self, job: DispatchJob, batch: List[int]):
+        with job._lock:
+            dead = job._error is not None
+        if dead:
+            return      # job already failed; don't pay for its batches
+        with self._lock:
+            self._executing += 1
+            if self._executing > self.stats.max_inflight:
+                self.stats.max_inflight = self._executing
+        try:
+            out = job.run(batch)
+        except ContextOverflowError:
+            with job._lock:
+                job.stats.retries += 1
+            self.stats.add(retries=1)
+            if len(batch) == 1:
+                self._resolve(job, batch[0], None)
+                with job._lock:
+                    job.stats.nulls += 1
+                self.stats.add(nulls=1)
+                job._batch_finished()
+                return
+            head, tail = split_batch(batch)
+            job._batch_started(1)        # one batch became two
+            self._pool.submit(self._run_batch, job, head)
+            self._pool.submit(self._run_batch, job, tail)
+            return
+        finally:
+            with self._lock:
+                self._executing -= 1
+        with job._lock:
+            job.stats.requests += 1
+            job.stats.batch_sizes.append(len(batch))
+        self.stats.add(requests=1)
+        for pos, val in zip(batch, out):
+            self._resolve(job, pos, val)
+        job._batch_finished()
+
+    def _resolve(self, job: DispatchJob, pos: int, value):
+        job.values[pos] = value
+        key = job.keys[pos]
+        if job.cache is not None and value is not None:
+            job.cache.put(key, value)
+        entry = job._owned_entries.get(pos)
+        if entry is not None:
+            entry.resolve(value)
+            with self._lock:
+                if self._inflight.get(key) is entry:
+                    del self._inflight[key]
+
+

@@ -72,14 +72,22 @@ _SAMPLE_ROWS = 32
 
 @dataclass
 class PlanCost:
-    """Estimated provider-side cost of one plan."""
+    """Estimated provider-side cost of one plan.
+
+    ``waves`` is the critical-path latency estimate for the concurrent
+    scheduler: per node, ``ceil(requests / model.max_concurrency)``
+    request round-trips must run back-to-back (the scheduler overlaps
+    everything else), summed over the sequential node chain.  With the
+    serial executor (``scheduler=None``) the critical path is simply
+    ``requests``."""
     requests: int = 0
     tokens: int = 0
     rows_into_llm: int = 0      # tuples fed to semantic ops, post-dedup-free
+    waves: int = 0              # critical-path request waves (concurrent)
 
     def __str__(self):
         return (f"requests={self.requests} tokens={self.tokens} "
-                f"llm_rows={self.rows_into_llm}")
+                f"llm_rows={self.rows_into_llm} waves={self.waves}")
 
 
 @dataclass
@@ -158,10 +166,15 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
     per_tuple = _avg_tuple_tokens(source, info.get("cols", ()),
                                   ctx.serialization)
 
+    def waves(requests: int) -> int:
+        limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+        return -(-requests // limit)
+
     if op == "llm_embedding":
         cost.requests = 1
         cost.tokens = n * per_tuple
         cost.rows_into_llm = n
+        cost.waves = waves(cost.requests)
         return rows, cost
 
     if op == "llm_rerank":
@@ -173,6 +186,9 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
         cost.requests = windows
         cost.tokens = windows * (prefix_tokens + window * per_tuple)
         cost.rows_into_llm = n
+        # rerank windows chain (each consumes the last window's output):
+        # no overlap available, every request is its own wave
+        cost.waves = cost.requests
         return rows, cost
 
     if op == "llm_fused":
@@ -190,6 +206,7 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
     cost.requests = len(plan.batches)
     cost.tokens = sum(plan.est_tokens) + cost.requests * prefix_tokens
     cost.rows_into_llm = n
+    cost.waves = waves(cost.requests)
 
     if op == "llm_filter":
         _, pid = _node_prompt_text(ctx, node)
@@ -204,8 +221,12 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
 
 def estimate_plan_cost(ctx: SemanticContext, source: Table,
                        nodes: Sequence) -> Tuple[PlanCost, List[dict]]:
+    from .pipeline import Pipeline      # local import: avoid cycle
+
     total = PlanCost()
     per_node: List[dict] = []
+    node_info: dict = {}      # id(node) -> (model_ref, limit, requests,
+    #                            standalone waves)
     rows = float(len(source))
     for node in nodes:
         rows, c = estimate_node_cost(ctx, node, rows, source)
@@ -214,6 +235,29 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
         total.requests += c.requests
         total.tokens += c.tokens
         total.rows_into_llm += c.rows_into_llm
+        ref, limit = "", 1
+        if node.op in SEMANTIC_OPS and c.requests:
+            m = ctx.resolve_model(node.info["model"])
+            ref = m.ref
+            limit = max(1, getattr(m, "max_concurrency", 1) or 1)
+        node_info[id(node)] = (ref, limit, c.requests, c.waves)
+    # critical path: nodes in one dispatch group overlap, but same-model
+    # members contend for one gate — their requests share the model's
+    # concurrency budget, so per group it is the slowest MODEL (summed
+    # requests / limit), and groups run back-to-back
+    for group in Pipeline._dispatch_groups(list(nodes)):
+        if len(group) == 1:
+            total.waves += node_info.get(id(group[0]), ("", 1, 0, 0))[3]
+            continue
+        per_model: dict = {}
+        for n in group:
+            ref, limit, reqs, _ = node_info[id(n)]
+            if not reqs:
+                continue
+            r0, l0 = per_model.get(ref, (0, limit))
+            per_model[ref] = (r0 + reqs, min(l0, limit))
+        total.waves += max((-(-r // l) for r, l in per_model.values()),
+                           default=0)
     return total, per_node
 
 

@@ -24,7 +24,16 @@ rewrites the chained node list with three cost-based rules —
 
 ``collect(optimize=False)`` is the escape hatch that executes nodes
 exactly as chained; ``explain()`` prints the logical and rewritten plans
-side by side with estimated request/token counts and the fired rewrites.
+side by side with estimated request/token counts, the critical-path
+``waves`` latency estimate, and the fired rewrites.
+
+**Concurrent dispatch** (``core/scheduler.py``): when the context holds
+a ``RequestScheduler``, ``collect()`` additionally dispatches runs of
+independent row-preserving map nodes concurrently (and every node's
+batches overlap on the scheduler's worker pool), so wall-clock tracks
+the model's ``max_concurrency`` instead of the batch count.  Dispatch
+never changes which tuples a node sees — results and request/token
+counts are identical to the serial path.
 
 Relational ``filter`` predicates are opaque closures; pass
 ``filter(pred, cols=[...])`` to declare the columns the predicate reads
@@ -38,6 +47,7 @@ a deterministic template planner — DEMO-ONLY, as recorded in DESIGN.md §8.
 from __future__ import annotations
 
 import re
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -45,6 +55,11 @@ from repro.core import functions as F
 from repro.core.functions import SemanticContext
 
 from .table import Table
+
+# row-preserving semantic map ops: safe to dispatch concurrently when no
+# def-use dependency links them (each sees the group's input table either
+# way, so results AND request/token counts match the serial execution)
+_PARALLEL_MAP_OPS = ("llm_complete", "llm_complete_json", "llm_embedding")
 
 
 @dataclass
@@ -145,22 +160,118 @@ class Pipeline:
             self._opt = optimize_plan(self.ctx, self.source, self.nodes)
         return self._opt
 
-    def collect(self, optimize: bool = True) -> Table:
+    # ---- concurrent node dispatch -----------------------------------------
+    @staticmethod
+    def _node_outs(node: PlanNode) -> List[str]:
+        if node.info.get("out"):
+            return [node.info["out"]]
+        return list(node.info.get("outs", ()))
+
+    @staticmethod
+    def _dispatch_groups(nodes: List[PlanNode]) -> List[List[PlanNode]]:
+        """Partition the plan into maximal runs of independent,
+        row-preserving semantic map nodes (fused siblings included when
+        they carry no filter sub-task).  Each multi-node group executes
+        concurrently; everything else stays node-at-a-time."""
+        def parallel_ok(node: PlanNode) -> bool:
+            if node.op in _PARALLEL_MAP_OPS:
+                return True
+            return (node.op == "llm_fused"
+                    and "filter" not in node.info.get("kinds", ()))
+
+        groups: List[List[PlanNode]] = []
+        i = 0
+        while i < len(nodes):
+            node = nodes[i]
+            if not parallel_ok(node):
+                groups.append([node])
+                i += 1
+                continue
+            group = [node]
+            produced = set(Pipeline._node_outs(node))
+            j = i + 1
+            while j < len(nodes):
+                nxt = nodes[j]
+                if not parallel_ok(nxt):
+                    break
+                if set(nxt.info.get("cols", ())) & produced:
+                    break          # def-use dependency: must stay serial
+                group.append(nxt)
+                produced |= set(Pipeline._node_outs(nxt))
+                j += 1
+            groups.append(group)
+            i = j
+        return groups
+
+    def _run_group(self, t_in: Table, group: List[PlanNode]) -> Table:
+        """Execute a group of independent map nodes concurrently over one
+        input table, then merge their output columns in plan order."""
+        results: List = [None] * len(group)
+        errors: List[BaseException] = []
+
+        def worker(k: int, node: PlanNode):
+            try:
+                tbl = node.fn(t_in)
+                results[k] = (tbl, self.ctx.last_report_slot())
+            except BaseException as exc:       # re-raised on the caller
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(k, n),
+                                    name=f"flockjax-node-{n.op}")
+                   for k, n in enumerate(group)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+
+        acc = t_in
+        for node, (tbl, slot) in zip(group, results):
+            for out in self._node_outs(node):
+                acc = acc.with_column(out, tbl.column(out))
+            if slot is not None:
+                node.report_slot = slot
+            node.info["rows_out"] = len(acc)
+        return acc
+
+    def collect(self, optimize: bool = True,
+                parallel: Optional[bool] = None) -> Table:
         """Execute the plan.  ``optimize=False`` is the escape hatch that
-        runs the nodes exactly as chained (no pushdown/fusion/reorder)."""
+        runs the nodes exactly as chained (no pushdown/fusion/reorder).
+
+        ``parallel`` controls concurrent dispatch of independent plan
+        nodes (fused siblings, adjacent map ops with no def-use edge):
+        default on when the context has a ``RequestScheduler``, off
+        otherwise.  Dispatch never changes which tuples a node sees, so
+        results and request/token counts are identical either way."""
+        if parallel is None:
+            parallel = self.ctx.scheduler is not None
         nodes = self._plan().nodes if optimize else self.nodes
         self._executed_nodes = nodes
         self._executed_optimized = optimize
         t = self.source
         base = len(self.ctx.reports)
-        for node in nodes:
-            if node.fn is not None:
-                before = len(self.ctx.reports)
-                t = node.fn(t)
-                if len(self.ctx.reports) > before:
-                    node.report_slot = before
-                node.info["rows_out"] = len(t)
-        self._last_reports = self.ctx.reports[base:]
+        groups = (self._dispatch_groups(nodes) if parallel
+                  else [[n] for n in nodes])
+        try:
+            for group in groups:
+                if len(group) > 1:
+                    t = self._run_group(t, group)
+                    continue
+                node = group[0]
+                if node.fn is not None:
+                    before = len(self.ctx.reports)
+                    t = node.fn(t)
+                    if len(self.ctx.reports) > before:
+                        slot = self.ctx.last_report_slot()
+                        node.report_slot = before if slot is None else slot
+                    node.info["rows_out"] = len(t)
+        finally:
+            # bookkeeping + debounced selectivity survive node errors:
+            # earlier filters' observations would otherwise be lost
+            self._last_reports = self.ctx.reports[base:]
+            self.ctx.flush_selectivity()
         return t
 
     def reduce(self, model, prompt, cols: Sequence[str],
@@ -185,12 +296,14 @@ class Pipeline:
                 r = self.ctx.reports[node.report_slot]
                 sel = ("" if r.selectivity is None
                        else f" selectivity={r.selectivity:.2f}")
+                coal = ("" if not r.coalesced
+                        else f" coalesced={r.coalesced}")
                 lines.append(
                     f"        tuples={r.n_tuples} unique={r.n_unique} "
                     f"cache_hits={r.cache_hits} requests={r.requests} "
                     f"retries={r.retries} nulls={r.nulls} "
                     f"batch_sizes={r.batch_sizes[:8]} "
-                    f"serialization={r.serialization}{sel}")
+                    f"serialization={r.serialization}{sel}{coal}")
 
     def explain(self) -> str:
         """Render the logical plan, the optimizer's rewritten plan, the

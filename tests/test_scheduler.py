@@ -1,0 +1,502 @@
+"""Async provider scheduler tests: determinism vs the serial path,
+single-flight dedup of in-flight keys, overflow split-and-requeue under
+concurrency, thread-safety of the shared counters, and the persistence
+satellites (selectivity sidecar, prediction-cache compaction).
+"""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import (Catalog, MockProvider, PredictionCache,
+                        RequestScheduler, SelectivityStore,
+                        SemanticContext, llm_complete, llm_embedding,
+                        llm_filter, reset_global_catalog)
+from repro.core.batching import ContextOverflowError
+from repro.core.provider import ProviderStats
+from repro.core.resources import ModelResource
+from repro.engine import Pipeline, Table
+
+MODEL = {"model": "m", "context_window": 700, "max_output_tokens": 8,
+         "max_concurrency": 4}
+
+
+def _table(n=24):
+    return Table({
+        "text": [f"review {i} about {'join' if i % 3 == 0 else 'index'} "
+                 f"algorithms with a body" for i in range(n)],
+        "year": [2000 + i % 20 for i in range(n)],
+    })
+
+
+def _resource(**kw) -> ModelResource:
+    base = dict(name="m", version=1, arch="mock", context_window=4096,
+                max_output_tokens=8, max_concurrency=4)
+    base.update(kw)
+    return ModelResource(**base)
+
+
+# ---------------------------------------------------------------------------
+# determinism: scheduled == serial, bit for bit
+# ---------------------------------------------------------------------------
+def _build(ctx, table):
+    return (Pipeline(ctx, table, "reviews")
+            .llm_filter(MODEL, {"prompt": "is about joins"}, ["text"])
+            .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                          ["text"])
+            .llm_complete_json("meta", MODEL, {"prompt": "extract"},
+                               ["text"])
+            .limit(8))
+
+
+@pytest.mark.parametrize("optimize", [False, True])
+def test_scheduled_results_identical_to_serial(optimize):
+    reset_global_catalog()
+    table = _table()
+    ctx_s = SemanticContext(provider=MockProvider())
+    rows_s = _build(ctx_s, table).collect(optimize=optimize).rows()
+    with RequestScheduler() as sched:
+        ctx_c = SemanticContext(provider=MockProvider(), scheduler=sched)
+        rows_c = _build(ctx_c, table).collect(optimize=optimize).rows()
+    assert rows_c == rows_s
+    assert ctx_c.provider.stats.calls == ctx_s.provider.stats.calls
+    assert (ctx_c.provider.stats.prompt_tokens
+            == ctx_s.provider.stats.prompt_tokens)
+
+
+def test_scheduled_embedding_identical_to_serial():
+    texts = [f"passage {i}" for i in range(12)] * 2     # dups exercise dedup
+    model = {"model": "e", "embedding_dim": 16}
+    ctx_s = SemanticContext(provider=MockProvider())
+    ref = llm_embedding(ctx_s, model, texts)
+    with RequestScheduler() as sched:
+        ctx_c = SemanticContext(provider=MockProvider(), scheduler=sched)
+        out = llm_embedding(ctx_c, model, texts)
+    assert out.shape == ref.shape
+    assert (out == ref).all()
+    assert ctx_c.provider.stats.calls == ctx_s.provider.stats.calls
+
+
+# ---------------------------------------------------------------------------
+# single-flight: concurrent identical cache-miss keys issue ONE request
+# ---------------------------------------------------------------------------
+def test_single_flight_dedups_concurrent_identical_jobs():
+    rows = [{"t": f"row {i}"} for i in range(10)]
+    model = dict(MODEL, context_window=4096)     # one batch
+    prov = MockProvider(latency_per_call_s=0.25)
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(provider=prov, scheduler=sched)
+        out = [None, None]
+
+        def call(slot):
+            out[slot] = llm_complete(ctx, model, {"prompt": "p"}, rows)
+
+        t1 = threading.Thread(target=call, args=(0,))
+        t2 = threading.Thread(target=call, args=(1,))
+        t1.start()
+        time.sleep(0.05)        # t1's request is in flight, not done
+        t2.start()
+        t1.join()
+        t2.join()
+    assert out[0] == out[1]
+    assert prov.stats.calls == 1, \
+        "second job must coalesce onto the in-flight request"
+    assert sched.stats.coalesced == 10
+
+
+def test_single_flight_late_submitter_reads_cache():
+    # once the owning job resolved and left the in-flight registry, a new
+    # submit() sees the value via the cache re-check, not a new request
+    rows = [{"t": "same"}]
+    prov = MockProvider()
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(provider=prov, scheduler=sched)
+        a = llm_complete(ctx, MODEL, {"prompt": "p"}, rows)
+        b = llm_complete(ctx, MODEL, {"prompt": "p"}, rows)
+    assert a == b
+    assert prov.stats.calls == 1
+
+
+def test_no_coalescing_when_dedup_or_cache_disabled():
+    # single-flight is an extension of the cache: with dedup or caching
+    # off, duplicate keys must issue duplicate requests, exactly like
+    # the serial path (count parity is the scheduler's core contract)
+    rows = [{"t": "same"}] * 6
+    for kw in ({"enable_dedup": False}, {"enable_cache": False}):
+        ctx_s = SemanticContext(provider=MockProvider(), **kw)
+        ref = llm_complete(ctx_s, MODEL, {"prompt": "p"}, rows)
+        with RequestScheduler() as sched:
+            ctx_c = SemanticContext(provider=MockProvider(),
+                                    scheduler=sched, **kw)
+            out = llm_complete(ctx_c, MODEL, {"prompt": "p"}, rows)
+            assert out == ref
+            assert (ctx_c.provider.stats.calls
+                    == ctx_s.provider.stats.calls), kw
+            assert sched.stats.coalesced == 0
+
+
+def test_parallel_sibling_nodes_sharing_keys_match_serial_counts():
+    # two concurrently-dispatched map nodes with the same model/prompt/
+    # cols share cache keys; serial execution gives node 2 cache hits,
+    # concurrent dispatch must coalesce to the same total request count
+    table = Table({"text": [f"doc {i}" for i in range(12)]})
+    model = dict(MODEL, context_window=900)
+
+    def build(ctx):
+        return (Pipeline(ctx, table)
+                .llm_complete("a", model, {"prompt": "same"}, ["text"])
+                .llm_complete("b", model, {"prompt": "same"}, ["text"]))
+
+    ctx_s = SemanticContext(provider=MockProvider(), enable_dedup=False)
+    rows_s = build(ctx_s).collect(optimize=False).rows()
+    with RequestScheduler() as sched:
+        ctx_c = SemanticContext(provider=MockProvider(), scheduler=sched,
+                                enable_dedup=False)
+        rows_c = build(ctx_c).collect(optimize=False).rows()
+    assert rows_c == rows_s
+    assert ctx_c.provider.stats.calls == ctx_s.provider.stats.calls
+
+
+def test_duplicate_keys_inherit_borrowed_disposition():
+    # dedup disabled + cache on, two concurrent jobs over duplicate
+    # rows: job 2's first occurrence borrows job 1's in-flight entry,
+    # and its duplicates must inherit that borrow (the serial path
+    # would see cache hits for all of them) — one provider call total
+    rows = [{"t": "same"}] * 6
+    prov = MockProvider(latency_per_call_s=0.25)
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(provider=prov, scheduler=sched,
+                              enable_dedup=False)
+        out = [None, None]
+
+        def call(slot):
+            out[slot] = llm_complete(ctx, MODEL, {"prompt": "p"}, rows)
+
+        t1 = threading.Thread(target=call, args=(0,))
+        t2 = threading.Thread(target=call, args=(1,))
+        t1.start()
+        time.sleep(0.05)
+        t2.start()
+        t1.join()
+        t2.join()
+    assert out[0] == out[1]
+    assert prov.stats.calls == 1, \
+        "duplicates of a borrowed key must not issue their own requests"
+
+
+def test_borrower_sees_owner_error_not_none():
+    # if the owning job's provider request dies, a coalesced borrower
+    # must re-raise the error, not return silent NULLs
+    rows = [{"t": f"row {i}"} for i in range(4)]
+
+    def bad(kind, prefix, batch_rows):
+        time.sleep(0.2)
+        raise RuntimeError("provider down")
+
+    prov = MockProvider(bad)
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(provider=prov, scheduler=sched)
+        errors = []
+
+        def call():
+            try:
+                llm_complete(ctx, MODEL, {"prompt": "p"}, rows)
+            except Exception as exc:        # noqa: BLE001 - recording
+                errors.append(exc)
+
+        t1 = threading.Thread(target=call)
+        t2 = threading.Thread(target=call)
+        t1.start()
+        time.sleep(0.05)
+        t2.start()
+        t1.join()
+        t2.join()
+    assert len(errors) == 2
+    assert all(isinstance(e, RuntimeError) for e in errors)
+
+
+# ---------------------------------------------------------------------------
+# overflow split-and-requeue inside the scheduler
+# ---------------------------------------------------------------------------
+def test_overflow_splits_and_requeues_under_concurrency():
+    with RequestScheduler(max_workers=4) as sched:
+        calls = []
+
+        def run(batch):
+            calls.append(list(batch))
+            if len(batch) > 3:
+                raise ContextOverflowError("too big")
+            return [f"v{p}" for p in batch]
+
+        keys = [f"k{i}" for i in range(20)]
+        job = sched.submit(_resource(), keys, run,
+                           batches=[list(range(20))])
+        values, stats = job.result(timeout=10)
+    assert values == [f"v{i}" for i in range(20)]
+    assert stats.retries > 0
+    assert stats.nulls == 0
+    # batch_sizes records successful requests only: every one must have
+    # been split below the overflow threshold, covering all 20 positions
+    assert sum(stats.batch_sizes) == 20
+    assert all(s <= 3 for s in stats.batch_sizes)
+    assert calls[0] == list(range(20))       # the original oversized batch
+
+
+def test_overflow_single_tuple_yields_null():
+    with RequestScheduler(max_workers=2) as sched:
+        def run(batch):
+            raise ContextOverflowError("always")
+
+        job = sched.submit(_resource(), ["a", "b"], run,
+                           batches=[[0], [1]])
+        values, stats = job.result(timeout=10)
+    assert values == [None, None]
+    assert stats.nulls == 2
+
+
+def test_overflow_end_to_end_matches_serial():
+    # tight context window: the planner's estimate under-counts the row
+    # wrappers, so real provider overflows trigger the split protocol,
+    # which must land on the same results/nulls as the serial path
+    rows = [{"t": f"x{i}"} for i in range(6)] + [{"t": "y" * 4000}]
+    model = {"model": "m", "context_window": 200, "max_output_tokens": 4}
+    ctx_s = SemanticContext(provider=MockProvider(), enable_dedup=False,
+                            enable_cache=False)
+    ref = llm_complete(ctx_s, model, {"prompt": "p"}, rows)
+    with RequestScheduler() as sched:
+        ctx_c = SemanticContext(provider=MockProvider(), scheduler=sched,
+                                enable_dedup=False, enable_cache=False)
+        out = llm_complete(ctx_c, model, {"prompt": "p"}, rows)
+    assert out == ref
+    assert out[-1] is None          # the oversized tuple is NULL both ways
+    assert any(v is not None for v in out[:-1])
+    assert ctx_c.reports[-1].nulls == ctx_s.reports[-1].nulls
+    assert ctx_s.reports[-1].retries > 0
+
+
+# ---------------------------------------------------------------------------
+# per-model concurrency + node-level overlap
+# ---------------------------------------------------------------------------
+def test_max_concurrency_bounds_inflight_requests():
+    n_batches, seen = 8, []
+    lock = threading.Lock()
+    live = [0]
+
+    def run(batch):
+        with lock:
+            live[0] += 1
+            seen.append(live[0])
+        time.sleep(0.03)
+        with lock:
+            live[0] -= 1
+        return [f"v{p}" for p in batch]
+
+    with RequestScheduler(max_workers=16) as sched:
+        job = sched.submit(_resource(max_concurrency=2),
+                           [f"k{i}" for i in range(n_batches)], run,
+                           batches=[[i] for i in range(n_batches)])
+        job.result(timeout=10)
+    assert max(seen) <= 2
+    assert sched.stats.max_inflight <= 2
+
+
+def test_independent_nodes_overlap_wall_clock():
+    table = Table({"text": [f"doc {i}" for i in range(6)]})
+    model = {"model": "m", "context_window": 8192, "max_output_tokens": 4,
+             "max_concurrency": 8}
+
+    def build(ctx):
+        return (Pipeline(ctx, table)
+                .llm_complete("a", model, {"prompt": "p1"}, ["text"])
+                .llm_complete("b", model, {"prompt": "p2"}, ["text"])
+                .llm_complete("c", model, {"prompt": "p3"}, ["text"]))
+
+    ctx_s = SemanticContext(provider=MockProvider(latency_per_call_s=0.06),
+                            enable_cache=False)
+    t0 = time.perf_counter()
+    rows_s = build(ctx_s).collect(optimize=False).rows()
+    dt_serial = time.perf_counter() - t0
+
+    with RequestScheduler() as sched:
+        ctx_c = SemanticContext(
+            provider=MockProvider(latency_per_call_s=0.06),
+            scheduler=sched, enable_cache=False)
+        t0 = time.perf_counter()
+        rows_c = build(ctx_c).collect(optimize=False).rows()
+        dt_sched = time.perf_counter() - t0
+    assert rows_c == rows_s
+    assert dt_sched < 0.75 * dt_serial, \
+        f"no overlap: scheduled {dt_sched:.3f}s vs serial {dt_serial:.3f}s"
+
+
+def test_coalesced_positions_repack_densely():
+    # keys served by the cache re-check must not leave sparse batches:
+    # the surviving owned positions re-plan through plan_batches
+    cache = PredictionCache()
+    for i in range(0, 10, 2):
+        cache.put(f"k{i}", f"cached{i}")
+    with RequestScheduler() as sched:
+        job = sched.submit_map(
+            _resource(context_window=60, max_output_tokens=8),
+            [f"k{i}" for i in range(10)], [10] * 10, 0,
+            lambda batch: [f"v{p}" for p in batch], cache=cache)
+        values, stats = job.result(timeout=10)
+    assert values == [f"cached{i}" if i % 2 == 0 else f"v{i}"
+                      for i in range(10)]
+    assert job.late_hits == 5       # cache peeks, not in-flight sharing
+    assert job.coalesced == 0
+    # 5 owned positions at 18 tokens each under a 60-token budget pack
+    # as [3, 2]; filtering the 10-key plan would have given 4 requests
+    assert stats.batch_sizes == [3, 2]
+
+
+def test_model_gate_most_restrictive_limit_wins():
+    with RequestScheduler() as sched:
+        g1 = sched._model_gate(_resource(max_concurrency=8))
+        g2 = sched._model_gate(_resource(max_concurrency=2))
+        g3 = sched._model_gate(_resource(max_concurrency=8))
+    assert g1 is g2 is g3
+    assert g3.limit == 2        # limits only shrink, never grow
+
+
+def test_dispatch_groups_respect_def_use_edges():
+    from repro.engine.pipeline import PlanNode
+
+    def node(op, cols, out=None):
+        return PlanNode(op, {"cols": cols, "out": out})
+
+    a = node("llm_complete", ["text"], "a")
+    b = node("llm_complete", ["text"], "b")
+    dep = node("llm_complete", ["a"], "c")       # reads a's output
+    flt = node("llm_filter", ["text"])
+    groups = Pipeline._dispatch_groups([a, b, dep, flt])
+    assert [len(g) for g in groups] == [2, 1, 1]
+    assert groups[0] == [a, b]
+
+
+# ---------------------------------------------------------------------------
+# thread-safety stress: shared counters under the worker pool
+# ---------------------------------------------------------------------------
+def test_provider_stats_thread_safety_stress():
+    stats = ProviderStats()
+    n_threads, n_iter = 8, 2000
+
+    def worker():
+        for _ in range(n_iter):
+            stats.add(calls=1, prompt_tokens=3, output_tokens=2)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.calls == n_threads * n_iter
+    assert stats.prompt_tokens == 3 * n_threads * n_iter
+    assert stats.output_tokens == 2 * n_threads * n_iter
+
+
+def test_prediction_cache_thread_safety_stress(tmp_path):
+    cache = PredictionCache(capacity=500,
+                            persist_path=str(tmp_path / "c.jsonl"))
+    n_threads, n_iter = 8, 400
+
+    def worker(tid):
+        for i in range(n_iter):
+            key = f"k{(tid * 7 + i) % 300}"
+            cache.put(key, f"v{i % 5}")
+            cache.get(key)
+            cache.peek(key)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(cache._data) <= 300
+    cache.compact()
+    reloaded = PredictionCache(persist_path=str(tmp_path / "c.jsonl"))
+    assert set(reloaded._data) == set(cache._data)
+
+
+# ---------------------------------------------------------------------------
+# satellite: prediction-cache persistence growth
+# ---------------------------------------------------------------------------
+def test_cache_noop_puts_do_not_grow_file(tmp_path):
+    path = tmp_path / "cache.jsonl"
+    cache = PredictionCache(persist_path=str(path))
+    for _ in range(50):
+        cache.put("k", "v")              # 49 re-puts of an identical entry
+    assert len(path.read_text().splitlines()) == 1
+    cache.put("k", "v2")                 # value change IS appended
+    assert len(path.read_text().splitlines()) == 2
+
+
+def test_cache_compact_rewrites_from_live_lru(tmp_path):
+    path = tmp_path / "cache.jsonl"
+    cache = PredictionCache(capacity=10, persist_path=str(path))
+    for i in range(30):
+        cache.put(f"k{i}", f"v{i}")      # 20 evicted from the LRU
+    assert len(path.read_text().splitlines()) == 30
+    cache.compact()
+    lines = path.read_text().splitlines()
+    assert len(lines) == 10
+    assert {json.loads(ln)["k"] for ln in lines} \
+        == {f"k{i}" for i in range(20, 30)}
+    reloaded = PredictionCache(persist_path=str(path))
+    assert reloaded.get("k29") == (True, "v29")
+
+
+# ---------------------------------------------------------------------------
+# satellite: selectivity stats persistence sidecar
+# ---------------------------------------------------------------------------
+def test_selectivity_persists_across_sessions(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    catalog = Catalog()
+    catalog.create_prompt("joins", "is about joins")
+    rows = [{"t": f"{'join' if i % 4 == 0 else 'scan'} {i}"}
+            for i in range(16)]
+
+    ctx1 = SemanticContext(catalog=catalog,
+                           cache=PredictionCache(persist_path=cache_path))
+    llm_filter(ctx1, MODEL, {"prompt_name": "joins"}, rows)
+    ref = catalog.get_prompt("joins").ref
+    sel = ctx1.expected_selectivity(ref, default=-1.0)
+    assert sel >= 0.0
+    assert (tmp_path / "cache.jsonl.selectivity.json").exists()
+
+    # fresh session, same sidecar: stats are warm before any execution
+    ctx2 = SemanticContext(catalog=catalog,
+                           cache=PredictionCache(persist_path=cache_path))
+    assert ctx2.expected_selectivity(ref, default=-1.0) == sel
+
+
+def test_selectivity_invalidated_on_prompt_version_bump(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    catalog = Catalog()
+    catalog.create_prompt("joins", "is about joins")
+    ctx1 = SemanticContext(catalog=catalog,
+                           cache=PredictionCache(persist_path=cache_path))
+    old_ref = catalog.get_prompt("joins").ref
+    ctx1.record_selectivity(old_ref, 3, 10)
+
+    catalog.update_prompt("joins", "is strictly about join algorithms")
+    ctx2 = SemanticContext(catalog=catalog,
+                           cache=PredictionCache(persist_path=cache_path))
+    # stale version's stats are pruned; the new version starts fresh
+    assert ctx2.expected_selectivity(old_ref, default=-1.0) == -1.0
+    assert ctx2.expected_selectivity(catalog.get_prompt("joins").ref,
+                                     default=-1.0) == -1.0
+
+
+def test_selectivity_store_roundtrip_and_corruption(tmp_path):
+    store = SelectivityStore(str(tmp_path / "s.json"))
+    assert store.load() == {}
+    store.save({"p@1": [3, 10], "inline:x": [1, 2]})
+    assert store.load() == {"p@1": [3, 10], "inline:x": [1, 2]}
+    (tmp_path / "s.json").write_text("{not json")
+    assert store.load() == {}
