@@ -13,6 +13,10 @@ reproduced here:
   * async provider scheduler -> bench_scheduler (wall-clock vs
     max_concurrency on a latency-simulating MockProvider; emits
     machine-readable BENCH_scheduler.json next to this file)
+  * speculative filter-chain dispatch -> bench_speculative (3-filter
+    chain: k serial round-trips collapse to ~1, wasted requests within
+    the selectivity-predicted budget, calibrated explain() wall-clock
+    estimate within tolerance of measured; emits BENCH_speculative.json)
   * Query 3 hybrid search -> bench_hybrid_search
   * serving engine -> bench_continuous_batching
   * kernels -> bench_kernel_* (interpret-mode correctness-path timing; the
@@ -236,6 +240,142 @@ def bench_scheduler():
     return speedup4
 
 
+def bench_speculative():
+    """Speculative filter-chain dispatch: a 3-filter llm_filter chain
+    over a latency-simulating MockProvider, serial vs speculative.
+
+    Serial chain execution pays one provider round-trip per member
+    (each filter waits for its predecessor's survivors); speculation
+    fans all members out over the chain input concurrently and ANDs
+    the masks, collapsing the chain's critical path to ~1 round-trip.
+    Asserts:
+
+      * surviving rows are identical serial vs speculative,
+      * the planner CHOOSES speculation from the calibrated cost model
+        (a warmup run records selectivity + latency statistics),
+      * measured wasted requests stay within the selectivity-predicted
+        budget reported by explain(),
+      * explain()'s calibrated wall-clock estimate for the speculative
+        plan is within tolerance of the measured wall-clock,
+      * speculative wall-clock beats serial by the configured floor.
+    """
+    import re as _re
+
+    from repro.core import MockProvider, RequestScheduler, SemanticContext
+    from repro.engine import Pipeline, Table
+
+    # big enough that dispatch/GIL overhead (tens of ms across the
+    # 12-request fan-out) stays a small fraction of each round-trip
+    latency = 0.25
+    n = 96
+
+    def behaviour(kind, prefix, rows):
+        # deterministic, content-based verdicts with known selectivity:
+        # a filter prompt "contains <marker>" passes rows whose text
+        # carries the marker
+        if kind != "filter":
+            return None
+        marker = _re.search(r"contains (\w+)", prefix).group(1)
+        return [f"{i}: {'true' if marker in r else 'false'}"
+                for i, r in enumerate(rows)]
+
+    table = Table({"text": [
+        f"doc {i} {'alpha' if i % 3 else 'x'} "
+        f"{'beta' if i % 2 == 0 else 'y'} "
+        f"{'gamma' if i % 4 < 2 else 'z'} with a body of text"
+        for i in range(n)]})
+
+    # three DISTINCT models: semantic fusion would otherwise merge the
+    # chain into one multi-task pass (same model + cols), and distinct
+    # models fan out on independent concurrency gates
+    def model(k):
+        return {"model": f"spec-m{k}", "context_window": 100_000,
+                "max_output_tokens": 8, "max_concurrency": 16}
+
+    def build(ctx):
+        return (Pipeline(ctx, table, "docs")
+                .llm_filter(model(1), {"prompt": "contains alpha"},
+                            ["text"])
+                .llm_filter(model(2), {"prompt": "contains beta"},
+                            ["text"])
+                .llm_filter(model(3), {"prompt": "contains gamma"},
+                            ["text"]))
+
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(
+            provider=MockProvider(behaviour, latency_per_call_s=latency),
+            scheduler=sched, enable_cache=False, enable_dedup=False,
+            max_batch=24)
+        # warmup: records per-prompt selectivity and per-model latency
+        # calibration — the statistics the speculation decision needs
+        build(ctx).collect(speculate=False)
+
+        c0 = ctx.provider.stats.calls
+        t0 = time.perf_counter()
+        rows_serial = build(ctx).collect(speculate=False).rows()
+        dt_serial = time.perf_counter() - t0
+        req_serial = ctx.provider.stats.calls - c0
+
+        pipe = build(ctx)
+        t0 = time.perf_counter()
+        rows_spec = pipe.collect(speculate=True).rows()
+        dt_spec = time.perf_counter() - t0
+        req_spec = ctx.provider.stats.calls - c0 - req_serial
+
+    assert rows_spec == rows_serial, \
+        "speculative chain changed the surviving tuple stream"
+    plan = pipe._plan(True)
+    decisions = [d for d in plan.spec_decisions if d.chosen]
+    assert decisions, "planner did not choose speculation: " + "; ".join(
+        str(d) for d in plan.spec_decisions)
+    d = decisions[0]
+    wasted = req_spec - req_serial
+    assert wasted <= d.wasted_requests, \
+        f"measured waste {wasted} exceeds the selectivity-predicted " \
+        f"budget {d.wasted_requests}"
+
+    est_wall = plan.optimized_cost.wall_s
+    assert est_wall > 0, "cost model stayed uncalibrated after warmup"
+    est_err = abs(est_wall - dt_spec) / dt_spec
+    # gates relaxable on oversubscribed CI runners (thread wakeups
+    # stretch past the simulated provider latency)
+    tol = float(os.environ.get("BENCH_SPECULATIVE_EST_TOL", "0.25"))
+    floor = float(os.environ.get("BENCH_SPECULATIVE_MIN_SPEEDUP", "1.8"))
+    speedup = dt_serial / dt_spec
+
+    results = {
+        "latency_per_call_s": latency, "rows": n, "chain": 3,
+        "serial": {"wall_s": round(dt_serial, 4), "requests": req_serial,
+                   "waves_est": d.serial_waves,
+                   "wall_est_s": round(d.serial_wall_s, 4)},
+        "speculative": {"wall_s": round(dt_spec, 4),
+                        "requests": req_spec,
+                        "waves_est": d.spec_waves,
+                        "wall_est_s": round(est_wall, 4)},
+        "wasted_requests": wasted,
+        "wasted_budget": d.wasted_requests,
+        "speedup": round(speedup, 2),
+        "est_wall_error": round(est_err, 3),
+    }
+    out_path = Path(__file__).resolve().parent / "BENCH_speculative.json"
+    out_path.write_text(json.dumps(results, indent=1))
+
+    _row("speculative_serial", dt_serial * 1e6 / n,
+         f"requests={req_serial} waves={d.serial_waves}")
+    _row("speculative_spec", dt_spec * 1e6 / n,
+         f"requests={req_spec} waves={d.spec_waves} "
+         f"speedup={speedup:.1f}x wasted={wasted}/{d.wasted_requests}")
+    _row("speculative_estimate", est_wall * 1e6,
+         f"est_wall_error={est_err:.1%} json={out_path.name}")
+    assert est_err <= tol, \
+        f"calibrated wall estimate {est_wall:.3f}s is {est_err:.0%} " \
+        f"off measured {dt_spec:.3f}s (tolerance {tol:.0%})"
+    assert speedup >= floor, \
+        f"expected >={floor}x wall-clock reduction from speculation, " \
+        f"got {speedup:.1f}x"
+    return speedup
+
+
 def bench_caching():
     from repro.core import MockProvider, SemanticContext, llm_complete
     rows = [{"r": f"text {i}"} for i in range(100)]
@@ -381,6 +521,7 @@ _ALL_BENCHES = {
     "batching_chat_api": bench_batching_chat_api,
     "optimizer": bench_optimizer,
     "scheduler": bench_scheduler,
+    "speculative": bench_speculative,
     "caching": bench_caching,
     "dedup": bench_dedup,
     "fusion_methods": bench_fusion_methods,

@@ -7,7 +7,8 @@ dedup — plus fusion for hybrid search.
 
 from .batching import (BatchPlan, BatchStats, ContextOverflowError,
                        plan_batches, run_adaptive)
-from .cache import PredictionCache, SelectivityStore, cache_key
+from .cache import (CalibrationStore, PredictionCache, SelectivityStore,
+                    cache_key)
 from .fusion import (FUSION_METHODS, combanz, combmed, combmnz, combsum,
                      fusion, max_normalize, rrf)
 from .functions import (ExecutionReport, SemanticContext, llm_complete,
@@ -21,4 +22,4 @@ from .provider import (BaseProvider, LocalJaxProvider, MockProvider,
 from .resources import (Catalog, ModelResource, PromptResource,
                         reset_global_catalog)
 from .scheduler import (DispatchJob, RequestScheduler, SchedulerStats,
-                        execute_serial, split_batch)
+                        SpeculativeMaskJoin, execute_serial, split_batch)

@@ -10,6 +10,7 @@ what keeps the TPU step dense.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -30,6 +31,9 @@ class BatchStats:
     retries: int = 0
     nulls: int = 0
     batch_sizes: List[int] = field(default_factory=list)
+    # wall seconds per successful provider request, in completion order;
+    # feeds the calibrated cost model (SemanticContext.record_calibration)
+    latencies: List[float] = field(default_factory=list)
 
 
 def plan_batches(token_costs: Sequence[int], prefix_tokens: int,
@@ -67,10 +71,15 @@ def run_adaptive(tuples: Sequence, token_costs: Sequence[int],
     """Execute ``call(indices) -> per-index results`` under the adaptive
     protocol.  Returns (results aligned to tuples, stats).
 
-    Compatibility alias: the executor itself lives in ``scheduler.py``
-    (``execute_serial`` — the ``scheduler=None`` path; the concurrent
-    dispatch engine shares its split-and-requeue logic).  This module
-    keeps only the pure planner (``plan_batches``)."""
+    .. deprecated:: the executor lives in ``scheduler.py`` as
+       ``execute_serial`` (the ``scheduler=None`` path; the concurrent
+       dispatch engine shares its split-and-requeue logic).  This module
+       keeps only the pure planner (``plan_batches``); call
+       ``repro.core.scheduler.execute_serial`` directly."""
+    warnings.warn(
+        "run_adaptive is deprecated; use "
+        "repro.core.scheduler.execute_serial instead",
+        DeprecationWarning, stacklevel=2)
     from .scheduler import execute_serial
     return execute_serial(tuples, token_costs, prefix_tokens,
                           context_window, max_output_tokens, call,

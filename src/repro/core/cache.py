@@ -172,3 +172,84 @@ class SelectivityStore:
                     continue
             out[pid] = obs
         return out
+
+
+# per-model latency observations kept in the calibration sidecar: enough
+# for stable percentiles without the file growing with every request
+CALIBRATION_WINDOW = 256
+
+
+class CalibrationStore:
+    """JSON sidecar persisting per-model execution statistics aggregated
+    from ``ExecutionReport``s: request/retry counts, tuples served (mean
+    batch size), and a bounded window of recent per-request latencies.
+
+    This is what turns the optimizer's flat serialization-sample cost
+    model into a *calibrated* one: ``explain()``'s ``waves``
+    critical-path estimate multiplies by the model's observed latency
+    percentiles instead of guessing, and the speculative-dispatch
+    decision compares serial vs speculative wall-clock from the same
+    statistics.  Lives alongside the prediction cache (default path:
+    the cache's JSONL path + ``.calibration.json``), keyed by the
+    model's ``name@version`` ref so a model re-version orphans old
+    entries; ``prune_stale`` drops refs a catalog resolves to a newer
+    version.  A corrupt or unreadable sidecar loads as empty — the cost
+    model degrades to uncalibrated, never crashes."""
+
+    def __init__(self, path: str):
+        self.path = Path(path)
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def _valid(rec) -> bool:
+        if not isinstance(rec, dict):
+            return False
+        for k in ("requests", "retries", "tuples"):
+            v = rec.get(k)
+            if not isinstance(v, int) or v < 0:
+                return False
+        lat = rec.get("latency_s")
+        return (isinstance(lat, list)
+                and all(isinstance(x, (int, float)) and x >= 0
+                        for x in lat))
+
+    def load(self) -> dict[str, dict]:
+        if not self.path.exists():
+            return {}
+        try:
+            data = json.loads(self.path.read_text())
+        except (json.JSONDecodeError, OSError):
+            return {}
+        if not isinstance(data, dict):
+            return {}
+        out: dict[str, dict] = {}
+        for ref, rec in data.get("models", {}).items():
+            if self._valid(rec):
+                out[ref] = {"requests": rec["requests"],
+                            "retries": rec["retries"],
+                            "tuples": rec["tuples"],
+                            "latency_s": [float(x) for x in
+                                          rec["latency_s"]
+                                          [-CALIBRATION_WINDOW:]]}
+        return out
+
+    def save(self, stats: dict[str, dict]):
+        with self._lock:
+            tmp = self.path.with_suffix(".tmp")
+            tmp.write_text(json.dumps({"models": stats}, indent=1))
+            tmp.replace(self.path)
+
+    @staticmethod
+    def prune_stale(stats: dict[str, dict], catalog) -> dict[str, dict]:
+        """Drop entries whose ``name@version`` ref is superseded by a
+        newer model version in ``catalog`` (a re-versioned model may
+        have a new arch/window — its latency profile starts fresh)."""
+        out = {}
+        for ref, rec in stats.items():
+            name, sep, _ = ref.rpartition("@")
+            if sep:
+                live = catalog.get_model(name)
+                if live is not None and live.ref != ref:
+                    continue
+            out[ref] = rec
+        return out

@@ -15,6 +15,18 @@ The dispatch stage has two modes: with ``SemanticContext(scheduler=...)``
 batch requests go to the concurrent ``RequestScheduler`` (overlapped
 in-flight requests, single-flight key dedup); with ``scheduler=None``
 they run through the serial adaptive loop — same batches, same results.
+
+Every dispatch additionally folds its ``BatchStats`` (request/retry
+counts, batch sizes, per-request latencies) into the context's
+``calibration_stats`` — persisted by the ``CalibrationStore`` sidecar —
+so the plan optimizer's cost model is calibrated from observed execution
+statistics rather than static heuristics.  The ``speculate`` knob
+(``False`` | ``True``/``"auto"`` | ``"always"``) opts a session into
+speculative ``llm_filter``-chain dispatch: the optimizer fans a chain's
+members out over the chain *input* concurrently and ANDs the masks,
+trading wasted requests — expected waste is predicted from recorded
+selectivity and capped at ``speculate_waste_cap`` x the serial chain's
+request count — for k-1 saved round-trips.
 """
 
 from __future__ import annotations
@@ -28,7 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .cache import PredictionCache, SelectivityStore, cache_key
+from .cache import (CALIBRATION_WINDOW, CalibrationStore, PredictionCache,
+                    SelectivityStore, cache_key)
 from .metaprompt import (build_metaprompt, build_multi_task, build_prefix,
                          serialize_tuple)
 from .provider import BaseProvider, MockProvider, estimate_tokens
@@ -52,6 +65,9 @@ class ExecutionReport:
     chosen_batch_size: str = "auto"
     selectivity: Optional[float] = None   # filter calls: pass rate
     coalesced: int = 0    # keys served by another job's in-flight request
+    # wall seconds per successful provider request (completion order);
+    # aggregated into the CalibrationStore for the calibrated cost model
+    latencies: List[float] = field(default_factory=list)
 
 
 class SemanticContext:
@@ -64,7 +80,9 @@ class SemanticContext:
                  enable_cache: bool = True, enable_dedup: bool = True,
                  enable_batching: bool = True, max_batch: int = 0,
                  scheduler: Optional[RequestScheduler] = None,
-                 selectivity_path: Optional[str] = None):
+                 selectivity_path: Optional[str] = None,
+                 speculate=False, speculate_waste_cap: float = 1.0,
+                 calibration_path: Optional[str] = None):
         self.catalog = catalog or Catalog()
         self.provider = provider or MockProvider()
         self.cache = cache or PredictionCache()
@@ -75,6 +93,15 @@ class SemanticContext:
         self.max_batch = max_batch
         # concurrent dispatch engine; None = serial (bit-identical) path
         self.scheduler = scheduler
+        # speculative filter-chain dispatch: False = off, True/"auto" =
+        # the optimizer speculates a chain only when the calibrated cost
+        # model says it is cheaper, "always" = force every eligible
+        # chain (tests/benchmarks).  ``speculate_waste_cap`` bounds the
+        # expected wasted requests (those over tuples an earlier filter
+        # would have eliminated, predicted from recorded selectivity)
+        # to at most cap x the serial chain's request count.
+        self.speculate = speculate
+        self.speculate_waste_cap = speculate_waste_cap
         self.reports: List[ExecutionReport] = []
         self._lock = threading.Lock()
         # selectivity gets its own lock: its save() does file I/O, which
@@ -101,6 +128,21 @@ class SemanticContext:
             loaded = SelectivityStore.prune_stale(
                 self.selectivity_store.load(), self.catalog)
             self.selectivity_stats.update(loaded)
+        # execution-statistics sidecar (calibrated cost model): per-model
+        # request/retry/tuple counts + a bounded latency window, fed by
+        # every dispatch and persisted next to the prediction cache
+        self.calibration_stats: Dict[str, dict] = {}
+        self._cal_lock = threading.Lock()
+        self._cal_last_save = float("-inf")
+        self._cal_dirty = False
+        if calibration_path is None and self.cache.persist_path is not None:
+            calibration_path = str(self.cache.persist_path) \
+                + ".calibration.json"
+        self.calibration_store = (CalibrationStore(calibration_path)
+                                  if calibration_path else None)
+        if self.calibration_store is not None:
+            self.calibration_stats.update(CalibrationStore.prune_stale(
+                self.calibration_store.load(), self.catalog))
 
     # ---- report bookkeeping (thread-safe: nodes may run concurrently) ------
     def add_report(self, rep: ExecutionReport):
@@ -158,6 +200,84 @@ class SemanticContext:
         if not s or s[1] == 0:
             return default
         return s[0] / s[1]
+
+    # ---- calibration bookkeeping (calibrated cost model) -------------------
+    def record_calibration(self, model_ref: str, requests: int,
+                           retries: int, tuples: int,
+                           latencies: Sequence[float]):
+        """Fold one dispatch's ``BatchStats`` into the per-model
+        execution statistics (debounced sidecar write, like
+        selectivity)."""
+        if requests <= 0 and retries <= 0:
+            return
+        with self._cal_lock:
+            rec = self.calibration_stats.setdefault(
+                model_ref, {"requests": 0, "retries": 0, "tuples": 0,
+                            "latency_s": []})
+            rec["requests"] += requests
+            rec["retries"] += retries
+            rec["tuples"] += tuples
+            rec["latency_s"].extend(float(x) for x in latencies)
+            del rec["latency_s"][:-CALIBRATION_WINDOW]
+            self._cal_dirty = True
+            self._save_calibration_locked()
+
+    def flush_calibration(self):
+        """Persist any calibration observations the debounce deferred."""
+        with self._cal_lock:
+            self._save_calibration_locked(force=True)
+
+    def _save_calibration_locked(self, force: bool = False):
+        if self.calibration_store is None or not self._cal_dirty:
+            return
+        now = time.monotonic()
+        if not force and now - self._cal_last_save < \
+                self._sel_save_interval:
+            return
+        self.calibration_store.save(
+            {ref: {"requests": r["requests"], "retries": r["retries"],
+                   "tuples": r["tuples"],
+                   "latency_s": list(r["latency_s"])}
+             for ref, r in self.calibration_stats.items()})
+        self._cal_last_save = now
+        self._cal_dirty = False
+
+    def flush_stats(self):
+        """Force both debounced sidecars (selectivity + calibration) to
+        disk.  ``Pipeline.collect()`` calls this once per plan
+        execution; using the context as a ``with`` block flushes on
+        exit."""
+        self.flush_selectivity()
+        self.flush_calibration()
+
+    def calibrated_latency(self, model_ref: str,
+                           pct: float = 50.0) -> Optional[float]:
+        """Observed per-request latency percentile for a model, from the
+        recorded execution statistics; None when uncalibrated."""
+        rec = self.calibration_stats.get(model_ref)
+        lat = rec["latency_s"] if rec else None
+        if not lat:
+            return None
+        return float(np.percentile(np.asarray(lat, dtype=float), pct))
+
+    def calibrated_retry_rate(self, model_ref: str) -> float:
+        """Observed overflow-retry fraction: retries / (requests +
+        retries), 0.0 when uncalibrated.  Inflates calibrated request
+        estimates — a model that routinely overflows pays more waves
+        than the batch plan alone predicts."""
+        rec = self.calibration_stats.get(model_ref)
+        if not rec:
+            return 0.0
+        total = rec["requests"] + rec["retries"]
+        return rec["retries"] / total if total else 0.0
+
+    # ---- lifecycle ---------------------------------------------------------
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.flush_stats()
+        return False
 
     # ---- resource resolution (name ref or inline spec) --------------------
     def resolve_model(self, spec: Dict[str, Any]) -> ModelResource:
@@ -279,6 +399,9 @@ def _dispatch_stage(ctx: SemanticContext, model: ModelResource,
     rep.requests, rep.retries, rep.nulls = (stats.requests, stats.retries,
                                             stats.nulls)
     rep.batch_sizes = stats.batch_sizes
+    rep.latencies = stats.latencies
+    ctx.record_calibration(model.ref, stats.requests, stats.retries,
+                           sum(stats.batch_sizes), stats.latencies)
     return out
 
 
@@ -456,16 +579,24 @@ def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
             rep.cache_hits += job.late_hits
             rep.requests, rep.batch_sizes = stats.requests, \
                 stats.batch_sizes
+            rep.latencies = stats.latencies
+            ctx.record_calibration(model.ref, stats.requests,
+                                   stats.retries, sum(stats.batch_sizes),
+                                   stats.latencies)
         else:
             out = [None] * len(todo)
             for b in batches:
+                t0 = time.monotonic()
                 em = run(b)
+                rep.latencies.append(time.monotonic() - t0)
                 rep.requests += 1
                 rep.batch_sizes.append(len(b))
                 for j, p in enumerate(b):
                     out[p] = em[j]
                     if ctx.enable_cache:
                         ctx.cache.put(keys[todo[p]], em[j])
+            ctx.record_calibration(model.ref, rep.requests, 0,
+                                   sum(rep.batch_sizes), rep.latencies)
         for j, i in enumerate(todo):
             vecs[i] = out[j]
     return np.asarray([vecs[b] for b in back], np.float32)

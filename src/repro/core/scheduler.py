@@ -20,6 +20,13 @@ Pieces:
   * single-flight dedup — identical cache keys submitted by concurrent
     jobs issue ONE provider request; late submitters attach to the
     in-flight entry and read its value when it resolves.
+  * ``SpeculativeMaskJoin`` — the mask-join dispatch group behind the
+    optimizer's speculative filter chains: fans every ``llm_filter``
+    chain member out over the chain's input stream concurrently and
+    ANDs the boolean masks, collapsing k round-trips into ~one; the
+    extra requests are bounded by recorded selectivity (the optimizer's
+    wasted-request budget) and identical keys still coalesce through
+    the single-flight registry.
   * adaptive overflow — ``ContextOverflowError`` splits the batch 10%
     (the paper §2.3 protocol) and requeues both halves on the pool; a
     single tuple that still overflows resolves to NULL.  The same split
@@ -65,7 +72,9 @@ def execute_serial(indices: Sequence, token_costs: Sequence[int],
     while work:
         batch = work.pop(0)
         try:
+            t0 = time.monotonic()
             out = call(batch)
+            stats.latencies.append(time.monotonic() - t0)
             stats.requests += 1
             stats.batch_sizes.append(len(batch))
             for idx, val in zip(batch, out):
@@ -435,6 +444,7 @@ class RequestScheduler:
             self._executing += 1
             if self._executing > self.stats.max_inflight:
                 self.stats.max_inflight = self._executing
+        t0 = time.monotonic()
         try:
             out = job.run(batch)
         except ContextOverflowError:
@@ -459,6 +469,7 @@ class RequestScheduler:
         with job._lock:
             job.stats.requests += 1
             job.stats.batch_sizes.append(len(batch))
+            job.stats.latencies.append(time.monotonic() - t0)
         self.stats.add(requests=1)
         for pos, val in zip(batch, out):
             self._resolve(job, pos, val)
@@ -475,5 +486,67 @@ class RequestScheduler:
             with self._lock:
                 if self._inflight.get(key) is entry:
                     del self._inflight[key]
+
+
+# ---------------------------------------------------------------------------
+# speculative mask-join dispatch group
+# ---------------------------------------------------------------------------
+class SpeculativeMaskJoin:
+    """Fan out the members of an ``llm_filter`` chain over the chain's
+    INPUT tuple stream and reconcile their boolean masks with AND.
+
+    Serial chain execution evaluates filter k+1 only on filter k's
+    survivors, so a k-filter chain pays k provider round-trips
+    back-to-back.  Speculation evaluates every member over the full
+    input concurrently and ANDs the masks — the surviving tuple stream
+    is identical (per-tuple verdicts are independent of batch
+    composition and of which tuples accompany them), but the chain's
+    critical path collapses to one round-trip, at the cost of requests
+    over tuples an earlier filter would have eliminated (the wasted-
+    request budget the optimizer bounds via recorded selectivity).
+
+    Members run on DEDICATED threads, not the scheduler's worker pool:
+    each member blocks in ``DispatchJob.result()`` while its batches
+    execute on the pool, and parking that wait on a pool thread could
+    deadlock a small pool.  Identical cache keys issued by different
+    members still coalesce through the scheduler's single-flight
+    registry, and every member's batches respect the per-model
+    concurrency gates.
+
+    A member that fails with a non-overflow error fails the whole
+    chain (overflow handling stays inside the dispatch engine: an
+    overflow-NULLed tuple decodes to ``False``, exactly as on the
+    serial path)."""
+
+    @staticmethod
+    def run(thunks: Sequence[Callable[[], List[bool]]]
+            ) -> tuple[List[List[bool]], List[bool]]:
+        """Run every member thunk concurrently; returns ``(member_masks,
+        combined)`` where ``combined[i] = AND(member[i] for members)``."""
+        masks: List[Optional[List[bool]]] = [None] * len(thunks)
+        errors: List[BaseException] = []
+
+        def worker(k: int, thunk):
+            try:
+                masks[k] = list(thunk())
+            except BaseException as exc:    # re-raised on the caller
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(k, th),
+                                    name=f"flockjax-spec-{k}")
+                   for k, th in enumerate(thunks)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        lengths = {len(m) for m in masks}
+        if len(lengths) > 1:
+            raise ValueError(
+                f"speculative members returned masks of differing "
+                f"lengths {sorted(lengths)}")
+        combined = [all(col) for col in zip(*masks)]
+        return [list(m) for m in masks], combined
 
 

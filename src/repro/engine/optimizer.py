@@ -36,15 +36,40 @@ that rewrite layer for ``Pipeline`` plans.  Three rules run in sequence:
    ``provider.estimate_tokens`` and the per-prompt pass rates recorded in
    ``SemanticContext.selectivity_stats``.
 
+4. **Speculative filter-chain dispatch** (opt-in via the context/
+   ``collect()`` ``speculate`` knob) — a cost-ordered ``llm_filter``
+   chain normally pays one provider round-trip PER member, because
+   member k+1 waits for member k's survivors.  When speculation is on,
+   the optimizer may replace the chain with one ``llm_spec_chain`` node
+   that fans every member out over the chain's *input* stream
+   concurrently (``core.scheduler.SpeculativeMaskJoin``) and ANDs the
+   masks — collapsing k round-trips into ~one at the cost of requests
+   over tuples an earlier filter would have eliminated.  The decision
+   is per chain: expected wasted requests are predicted from recorded
+   selectivity and must stay within ``speculate_waste_cap`` x the
+   serial request count, and the speculative plan must win on the
+   **calibrated** wall-clock estimate (observed per-request latency
+   percentiles and retry rates from the ``CalibrationStore``; plain
+   ``waves`` comparison when uncalibrated).  ``speculate="always"``
+   forces eligible chains regardless (equivalence tests, benchmarks).
+
+The cost model is *calibrated* when execution statistics exist:
+per-request latency percentiles turn ``waves`` into an ``est_wall``
+seconds estimate, observed overflow-retry rates inflate request counts,
+and observed mean batch sizes replace the flat default width for
+columns produced mid-plan that cannot be sampled from the source.
+
 ``optimize_plan`` is pure planning: it returns new ``PlanNode`` lists
-(fused nodes carry fresh closures) plus a cost estimate of both plans —
-nothing executes until ``Pipeline.collect()`` runs the rewritten plan.
+(fused/speculative nodes carry fresh closures) plus a cost estimate of
+both plans — nothing executes until ``Pipeline.collect()`` runs the
+rewritten plan.
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 from repro.core import functions as F
 from repro.core.batching import plan_batches
@@ -79,15 +104,62 @@ class PlanCost:
     request round-trips must run back-to-back (the scheduler overlaps
     everything else), summed over the sequential node chain.  With the
     serial executor (``scheduler=None``) the critical path is simply
-    ``requests``."""
+    ``requests``.
+
+    ``wall_s`` is the calibrated wall-clock estimate: waves multiplied
+    by each model's observed per-request latency percentile (p50 from
+    the ``CalibrationStore``).  It is 0.0 when any contributing model
+    has no recorded statistics — uncalibrated, not "instant".
+
+    ``wasted_requests`` is the expected speculative-dispatch waste: the
+    requests a chosen ``llm_spec_chain`` issues over tuples a serial
+    chain would have eliminated, predicted from recorded selectivity
+    (0 for plans without chosen speculation)."""
     requests: int = 0
     tokens: int = 0
     rows_into_llm: int = 0      # tuples fed to semantic ops, post-dedup-free
     waves: int = 0              # critical-path request waves (concurrent)
+    wall_s: float = 0.0         # calibrated latency estimate (0 = no data)
+    wasted_requests: int = 0    # expected speculative-request overshoot
 
     def __str__(self):
-        return (f"requests={self.requests} tokens={self.tokens} "
-                f"llm_rows={self.rows_into_llm} waves={self.waves}")
+        s = (f"requests={self.requests} tokens={self.tokens} "
+             f"llm_rows={self.rows_into_llm} waves={self.waves}")
+        if self.wall_s:
+            s += f" est_wall={self.wall_s:.3f}s"
+        if self.wasted_requests:
+            s += f" wasted_requests={self.wasted_requests}"
+        return s
+
+
+@dataclass
+class SpeculationDecision:
+    """Record of one per-chain speculative-dispatch decision: the serial
+    vs speculative waves/wall estimates, the expected wasted-request
+    budget, and whether the planner chose speculation."""
+    members: List[str]                  # member prompt identities
+    rows_in: int = 0
+    serial_requests: int = 0
+    spec_requests: int = 0
+    serial_waves: int = 0
+    spec_waves: int = 0
+    wasted_requests: int = 0            # expected extra requests (budget)
+    serial_wall_s: float = 0.0          # calibrated; 0.0 = uncalibrated
+    spec_wall_s: float = 0.0
+    chosen: bool = False
+    reason: str = ""
+
+    def __str__(self):
+        walls = ""
+        if self.serial_wall_s or self.spec_wall_s:
+            walls = (f" serial_wall={self.serial_wall_s:.3f}s "
+                     f"spec_wall={self.spec_wall_s:.3f}s")
+        return (f"chain of {len(self.members)} over {self.rows_in} rows: "
+                f"serial_waves={self.serial_waves} "
+                f"spec_waves={self.spec_waves}{walls} "
+                f"wasted<={self.wasted_requests} "
+                f"-> {'SPECULATE' if self.chosen else 'serial'} "
+                f"({self.reason})")
 
 
 @dataclass
@@ -101,6 +173,8 @@ class OptimizedPlan:
     # two plans, so estimates live here, not on node.info)
     naive_node_costs: List[dict] = field(default_factory=list)
     optimized_node_costs: List[dict] = field(default_factory=list)
+    # one entry per llm_filter chain considered for speculation
+    spec_decisions: List[SpeculationDecision] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +214,70 @@ def _fused_prompt_text(ctx: SemanticContext, node) -> str:
     return build_multi_task(kinds, texts)
 
 
+def _calibrated_requests(ctx: SemanticContext, model, n_rows: int,
+                         plan_requests: int, sampled: bool) -> int:
+    """Correct a batch-plan request estimate with recorded execution
+    statistics: when the tuple width could not be sampled from the
+    source (columns produced mid-plan), fall back to the model's
+    observed mean batch size; always inflate by the observed
+    overflow-retry rate (a model that routinely overflows pays more
+    requests than the plan alone predicts)."""
+    req = plan_requests
+    rec = ctx.calibration_stats.get(model.ref)
+    if not sampled and rec and rec["requests"]:
+        mean_bs = max(1.0, rec["tuples"] / rec["requests"])
+        req = max(req, math.ceil(n_rows / mean_bs))
+    retry_rate = ctx.calibrated_retry_rate(model.ref)
+    if retry_rate:
+        req = math.ceil(req * (1.0 + retry_rate))
+    return req
+
+
+def _per_model_waves(entries) -> Tuple[int, Optional[float]]:
+    """Reduce per-model ``(requests, limit, latency|None)`` entries to
+    the concurrent critical path: models fan out on independent gates,
+    so waves = max over models of ``ceil(requests / limit)``, and the
+    calibrated wall is the slowest model's ``waves x latency`` — or
+    ``None`` when any contributing model has no recorded latency."""
+    waves = 0
+    wall: Optional[float] = 0.0
+    for req, limit, lat in entries:
+        if not req:
+            continue
+        w = -(-req // limit)
+        waves = max(waves, w)
+        if lat is None:
+            wall = None
+        elif wall is not None:
+            wall = max(wall, w * lat)
+    return waves, wall
+
+
+def _filter_estimate(ctx: SemanticContext, member: dict, n: int,
+                     source: Table) -> Tuple[int, int]:
+    """(requests, tokens) estimate for one ``llm_filter`` evaluation —
+    ``member`` carries ``model``/``prompt``/``cols`` specs — over ``n``
+    tuples, with the calibrated request correction applied."""
+    if n <= 0:
+        return 0, 0
+    model = ctx.resolve_model(member["model"])
+    per_tuple = _avg_tuple_tokens(source, member.get("cols", ()),
+                                  ctx.serialization)
+    prompt_text, _ = ctx.resolve_prompt(member["prompt"])
+    prefix_tokens = estimate_tokens(
+        build_prefix("filter", prompt_text, ctx.serialization))
+    plan = plan_batches([per_tuple] * n, prefix_tokens,
+                        model.context_window, model.max_output_tokens,
+                        ctx.max_batch if ctx.enable_batching else 1)
+    sampled = any(c in source.columns for c in member.get("cols", ()))
+    requests = _calibrated_requests(ctx, model, n, len(plan.batches),
+                                    sampled)
+    tokens = sum(plan.est_tokens) + len(plan.batches) * prefix_tokens
+    if len(plan.batches):
+        tokens = int(tokens * requests / len(plan.batches))
+    return requests, tokens
+
+
 def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
                        source: Table) -> Tuple[float, PlanCost]:
     """(rows_out, provider cost) for one node under the cost model.
@@ -156,6 +294,33 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
         return min(rows, info.get("n", rows)), cost
     if op in ("select", "order_by", "project", "scan"):
         return rows, cost
+
+    if op == "llm_spec_chain":
+        # speculative mask-join: every member runs over the full chain
+        # input; waves are per-model (members of different models fan
+        # out on independent gates, same-model members share one)
+        n = int(round(rows))
+        if n <= 0:
+            return 0.0, cost
+        per_model: dict = {}        # ref -> [requests, limit, latency]
+        for member in info["member_specs"]:
+            model = ctx.resolve_model(member["model"])
+            limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+            req, tok = _filter_estimate(ctx, member, n, source)
+            cost.requests += req
+            cost.tokens += tok
+            cost.rows_into_llm += n
+            entry = per_model.setdefault(
+                model.ref, [0, limit, ctx.calibrated_latency(model.ref)])
+            entry[0] += req
+            entry[1] = min(entry[1], limit)
+            _, pid = ctx.resolve_prompt(member["prompt"])
+            rows = rows * ctx.expected_selectivity(pid,
+                                                   DEFAULT_SELECTIVITY)
+        cost.waves, wall = _per_model_waves(per_model.values())
+        cost.wall_s = wall or 0.0
+        return rows, cost
+
     if op not in SEMANTIC_OPS:
         return rows, cost
 
@@ -203,8 +368,12 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
     plan = plan_batches([per_tuple] * n, prefix_tokens,
                         model.context_window, model.max_output_tokens,
                         ctx.max_batch if ctx.enable_batching else 1)
-    cost.requests = len(plan.batches)
-    cost.tokens = sum(plan.est_tokens) + cost.requests * prefix_tokens
+    sampled = any(c in source.columns for c in info.get("cols", ()))
+    cost.requests = _calibrated_requests(ctx, model, n, len(plan.batches),
+                                         sampled)
+    cost.tokens = sum(plan.est_tokens) + len(plan.batches) * prefix_tokens
+    if len(plan.batches):
+        cost.tokens = int(cost.tokens * cost.requests / len(plan.batches))
     cost.rows_into_llm = n
     cost.waves = waves(cost.requests)
 
@@ -226,7 +395,7 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
     total = PlanCost()
     per_node: List[dict] = []
     node_info: dict = {}      # id(node) -> (model_ref, limit, requests,
-    #                            standalone waves)
+    #                            standalone waves, standalone wall)
     rows = float(len(source))
     for node in nodes:
         rows, c = estimate_node_cost(ctx, node, rows, source)
@@ -240,24 +409,48 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
             m = ctx.resolve_model(node.info["model"])
             ref = m.ref
             limit = max(1, getattr(m, "max_concurrency", 1) or 1)
-        node_info[id(node)] = (ref, limit, c.requests, c.waves)
+        node_info[id(node)] = (ref, limit, c.requests, c.waves, c.wall_s)
     # critical path: nodes in one dispatch group overlap, but same-model
     # members contend for one gate — their requests share the model's
     # concurrency budget, so per group it is the slowest MODEL (summed
-    # requests / limit), and groups run back-to-back
+    # requests / limit), and groups run back-to-back.  The calibrated
+    # wall estimate multiplies each wave count by the model's observed
+    # p50 request latency; a plan touching any uncalibrated model
+    # reports wall_s = 0.0 (unknown) rather than an undercount.
+    uncalibrated = False
     for group in Pipeline._dispatch_groups(list(nodes)):
         if len(group) == 1:
-            total.waves += node_info.get(id(group[0]), ("", 1, 0, 0))[3]
+            ref, limit, reqs, w, nwall = node_info.get(
+                id(group[0]), ("", 1, 0, 0, 0.0))
+            total.waves += w
+            if not reqs:
+                continue
+            if nwall:               # node computed its own (spec chain)
+                total.wall_s += nwall
+                continue
+            lat = ctx.calibrated_latency(ref) if ref else None
+            if lat is None:
+                uncalibrated = True
+            else:
+                total.wall_s += w * lat
             continue
         per_model: dict = {}
         for n in group:
-            ref, limit, reqs, _ = node_info[id(n)]
+            ref, limit, reqs, _, _ = node_info[id(n)]
             if not reqs:
                 continue
             r0, l0 = per_model.get(ref, (0, limit))
             per_model[ref] = (r0 + reqs, min(l0, limit))
-        total.waves += max((-(-r // l) for r, l in per_model.values()),
-                           default=0)
+        group_waves, group_wall = _per_model_waves(
+            (r, l, ctx.calibrated_latency(ref) if ref else None)
+            for ref, (r, l) in per_model.items())
+        total.waves += group_waves
+        if group_wall is None:
+            uncalibrated = True
+        else:
+            total.wall_s += group_wall
+    if uncalibrated:
+        total.wall_s = 0.0
     return total, per_node
 
 
@@ -445,6 +638,185 @@ def _reorder_filters(ctx: SemanticContext, nodes: List, source: Table,
 
 
 # ---------------------------------------------------------------------------
+# rule 4: speculative filter-chain dispatch (opt-in)
+# ---------------------------------------------------------------------------
+def _make_spec_chain_node(ctx: SemanticContext, chain: List):
+    """Build one ``llm_spec_chain`` node executing the chain members as
+    a concurrent mask-join over the chain's input tuple stream.
+
+    Each member runs the full ``llm_filter`` staged path (dedup, cache,
+    batch-plan, scheduler dispatch) on its own thread, so identical
+    cache keys across members coalesce through the scheduler's
+    single-flight registry and every member honours its model's
+    concurrency gate.  Masks are ANDed; a tuple NULLed by overflow
+    decodes to False — exactly the serial path's disposition — so the
+    surviving stream is bit-identical to serial chain execution.
+
+    Note on statistics: speculative members observe *marginal* pass
+    rates (over the chain input) where serial execution records
+    *conditional* ones (over the predecessors' survivors); both are
+    valid estimators for the cost model, and the waste budget is
+    computed from the same recorded values either way."""
+    from .pipeline import PlanNode      # local import: avoid cycle
+
+    members = [{"model": g.info["model"], "prompt": g.info["prompt"],
+                "cols": list(g.info["cols"])} for g in chain]
+    prompt_ids = [ctx.resolve_prompt(g.info["prompt"])[1] for g in chain]
+    all_cols: List[str] = []
+    for m in members:
+        for c in m["cols"]:
+            if c not in all_cols:
+                all_cols.append(c)
+
+    node = PlanNode("llm_spec_chain", {
+        "member_specs": members, "cols": all_cols,
+        "members": prompt_ids, "chain": len(members)})
+
+    def fn(t: Table) -> Table:
+        from repro.core.scheduler import SpeculativeMaskJoin
+
+        slots: List[Any] = [None] * len(members)
+
+        def make_thunk(k: int, member: dict):
+            def thunk() -> List[bool]:
+                tuples = [{c: row[c] for c in member["cols"]}
+                          for row in t.rows()]
+                mask = F.llm_filter(ctx, member["model"],
+                                    member["prompt"], tuples)
+                slots[k] = ctx.last_report_slot()
+                return mask
+            return thunk
+
+        masks, combined = SpeculativeMaskJoin.run(
+            [make_thunk(k, m) for k, m in enumerate(members)])
+        node.info["member_masks"] = masks
+        node.info["member_report_slots"] = slots
+        return t.filter_mask(combined)
+
+    node.fn = fn
+    return node
+
+
+def _decide_speculation(ctx: SemanticContext, source: Table, chain: List,
+                        rows_in: float, mode: str
+                        ) -> Tuple[SpeculationDecision, float]:
+    """Estimate serial vs speculative execution of one filter chain.
+
+    Serial: member k sees the survivors of members < k (cardinalities
+    from recorded selectivity) and its waves queue behind k-1 finished
+    round-trips.  Speculative: every member sees the full chain input;
+    same-model members share one concurrency gate, different models fan
+    out independently, so the chain's critical path is the slowest
+    model's wave count — ~1 round-trip when the fan-out fits the
+    concurrency limits.  Expected waste is the speculative request
+    count minus the serial one."""
+    n = int(round(rows_in))
+    decision = SpeculationDecision(
+        members=[ctx.resolve_prompt(g.info["prompt"])[1] for g in chain],
+        rows_in=n)
+    per_model: dict = {}        # ref -> [spec requests, limit, latency]
+    calibrated = True
+    rows = rows_in
+    for g in chain:
+        member = {"model": g.info["model"], "prompt": g.info["prompt"],
+                  "cols": g.info.get("cols", ())}
+        model = ctx.resolve_model(member["model"])
+        limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+        lat = ctx.calibrated_latency(model.ref)
+        if lat is None:
+            calibrated = False
+        req_serial, _ = _filter_estimate(ctx, member, int(round(rows)),
+                                         source)
+        decision.serial_requests += req_serial
+        w = -(-req_serial // limit) if req_serial else 0
+        decision.serial_waves += w
+        if lat is not None:
+            decision.serial_wall_s += w * lat
+        if int(round(rows)) == n:       # first member: same estimate
+            req_spec = req_serial
+        else:
+            req_spec, _ = _filter_estimate(ctx, member, n, source)
+        decision.spec_requests += req_spec
+        entry = per_model.setdefault(model.ref, [0, limit, lat])
+        entry[0] += req_spec
+        entry[1] = min(entry[1], limit)
+        _, pid = ctx.resolve_prompt(member["prompt"])
+        rows = rows * ctx.expected_selectivity(pid, DEFAULT_SELECTIVITY)
+    decision.spec_waves, spec_wall = _per_model_waves(per_model.values())
+    if spec_wall is not None:
+        decision.spec_wall_s = spec_wall
+    else:
+        decision.serial_wall_s = 0.0
+    decision.wasted_requests = max(
+        0, decision.spec_requests - decision.serial_requests)
+
+    if mode == "always":
+        decision.chosen = True
+        decision.reason = "forced by speculate='always'"
+        return decision, rows
+    cap = ctx.speculate_waste_cap * max(decision.serial_requests, 1)
+    if decision.wasted_requests > cap:
+        decision.reason = (f"expected waste {decision.wasted_requests} "
+                           f"requests exceeds cap {cap:.0f}")
+    elif calibrated and decision.spec_wall_s and decision.serial_wall_s:
+        decision.chosen = decision.spec_wall_s < decision.serial_wall_s
+        decision.reason = (
+            f"calibrated wall {decision.spec_wall_s:.3f}s "
+            f"{'<' if decision.chosen else '>='} "
+            f"{decision.serial_wall_s:.3f}s")
+    else:
+        decision.chosen = decision.spec_waves < decision.serial_waves
+        decision.reason = (
+            f"uncalibrated waves {decision.spec_waves} "
+            f"{'<' if decision.chosen else '>='} {decision.serial_waves}")
+    return decision, rows
+
+
+def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
+                      rewrites: List[str], mode: str
+                      ) -> Tuple[List, List[SpeculationDecision]]:
+    """Replace each eligible ``llm_filter`` chain (length >= 2) with a
+    speculative mask-join node when the decision model says it pays."""
+    out: List = []
+    decisions: List[SpeculationDecision] = []
+    rows = float(len(source))
+    i = 0
+    while i < len(nodes):
+        node = nodes[i]
+        if node.op != "llm_filter":
+            rows, _ = estimate_node_cost(ctx, node, rows, source)
+            out.append(node)
+            i += 1
+            continue
+        j = i
+        while j < len(nodes) and nodes[j].op == "llm_filter":
+            j += 1
+        chain = nodes[i:j]
+        if len(chain) < 2:
+            rows, _ = estimate_node_cost(ctx, node, rows, source)
+            out.append(node)
+            i = j
+            continue
+        decision, rows = _decide_speculation(ctx, source, chain, rows,
+                                             mode)
+        decisions.append(decision)
+        if decision.chosen:
+            out.append(_make_spec_chain_node(ctx, chain))
+            rewrites.append(
+                f"speculate(chain of {len(chain)}: "
+                f"spec_waves={decision.spec_waves} vs "
+                f"serial_waves={decision.serial_waves}, "
+                f"wasted<={decision.wasted_requests})")
+        else:
+            out.extend(chain)
+            rewrites.append(
+                f"rejected(speculate chain of {len(chain)}: "
+                f"{decision.reason})")
+        i = j
+    return out, decisions
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 # latency-equivalent token cost charged per provider request when ranking
@@ -457,8 +829,8 @@ def _cost_rank(c: PlanCost) -> float:
     return c.tokens + REQUEST_OVERHEAD_TOKENS * c.requests
 
 
-def optimize_plan(ctx: SemanticContext, source: Table,
-                  nodes: Sequence) -> OptimizedPlan:
+def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
+                  speculate=None) -> OptimizedPlan:
     """Rewrite a Pipeline node list; returns both plans' cost estimates.
 
     Pushdown always applies (it only ever shrinks the tuple stream LLM
@@ -466,6 +838,14 @@ def optimize_plan(ctx: SemanticContext, source: Table,
     cost-gated — each is kept only if the cost model says the plan got
     cheaper (e.g. fusing a highly selective filter with a completion
     would run the completion over the whole input, so it is rejected).
+
+    ``speculate`` (``None``/``False`` off, ``True``/``"auto"``
+    cost-gated, ``"always"`` forced) runs the speculative filter-chain
+    rule last, over the cost-ordered chains: each surviving
+    ``llm_filter`` chain of length >= 2 is either replaced by a
+    concurrent mask-join node or kept serial, per the calibrated
+    decision recorded in ``OptimizedPlan.spec_decisions``.
+
     Pure planning: no provider calls, no table materialisation."""
     naive = [n for n in nodes]
     rewrites: List[str] = []
@@ -488,9 +868,18 @@ def optimize_plan(ctx: SemanticContext, source: Table,
             rewrites.extend(f"rejected({rw}: estimated cost higher)"
                             for rw in trial_rw)
 
-    plan = OptimizedPlan(nodes=new, rewrites=rewrites)
+    spec_decisions: List[SpeculationDecision] = []
+    if speculate:
+        mode = "always" if speculate == "always" else "auto"
+        new, spec_decisions = _speculate_chains(ctx, source, new,
+                                                rewrites, mode)
+
+    plan = OptimizedPlan(nodes=new, rewrites=rewrites,
+                         spec_decisions=spec_decisions)
     plan.naive_cost, plan.naive_node_costs = estimate_plan_cost(
         ctx, source, list(naive))
     plan.optimized_cost, plan.optimized_node_costs = estimate_plan_cost(
         ctx, source, new)
+    plan.optimized_cost.wasted_requests = sum(
+        d.wasted_requests for d in spec_decisions if d.chosen)
     return plan

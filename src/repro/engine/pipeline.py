@@ -35,6 +35,20 @@ the model's ``max_concurrency`` instead of the batch count.  Dispatch
 never changes which tuples a node sees — results and request/token
 counts are identical to the serial path.
 
+**Speculative filter chains** (``collect(speculate=...)`` or the
+context's ``speculate`` knob): a chain of k ``llm_filter`` nodes
+normally costs k sequential provider round-trips, because each member
+waits for its predecessor's survivors.  With speculation the optimizer
+may fan all members out over the chain's *input* concurrently and AND
+the masks — the surviving stream is bit-identical, the critical path
+collapses to ~1 round-trip, and the price is extra requests over
+tuples an earlier filter would have eliminated.  The per-chain
+decision is driven by the calibrated cost model (observed latency
+percentiles, retry rates and batch sizes from the ``CalibrationStore``
+sidecar) and the expected waste — predicted from recorded selectivity
+and capped by ``ctx.speculate_waste_cap`` — is reported in
+``explain()``'s "Speculation:" section.
+
 Relational ``filter`` predicates are opaque closures; pass
 ``filter(pred, cols=[...])`` to declare the columns the predicate reads
 and unlock pushdown past column-producing semantic ops.
@@ -153,12 +167,22 @@ class Pipeline:
                          cols=cols)
 
     # ---- execution -----------------------------------------------------------
-    def _plan(self):
-        """Run (and memoise) the cost-based rewrite for the current nodes."""
+    def _plan(self, speculate=None):
+        """Run (and memoise, per ``speculate`` mode) the cost-based
+        rewrite for the current nodes."""
         from .optimizer import optimize_plan
-        if getattr(self, "_opt", None) is None:
-            self._opt = optimize_plan(self.ctx, self.source, self.nodes)
-        return self._opt
+        if speculate is None:
+            speculate = self.ctx.speculate
+        # True and "auto" produce identical plans — share one memo slot
+        key = ("always" if speculate == "always"
+               else "auto" if speculate else False)
+        plans = getattr(self, "_opt", None)
+        if plans is None:
+            plans = self._opt = {}
+        if key not in plans:
+            plans[key] = optimize_plan(self.ctx, self.source, self.nodes,
+                                       speculate=speculate)
+        return plans[key]
 
     # ---- concurrent node dispatch -----------------------------------------
     @staticmethod
@@ -236,18 +260,36 @@ class Pipeline:
         return acc
 
     def collect(self, optimize: bool = True,
-                parallel: Optional[bool] = None) -> Table:
+                parallel: Optional[bool] = None,
+                speculate=None) -> Table:
         """Execute the plan.  ``optimize=False`` is the escape hatch that
-        runs the nodes exactly as chained (no pushdown/fusion/reorder).
+        runs the nodes exactly as chained (no pushdown/fusion/reorder —
+        and no speculation, which is an optimizer rewrite).
 
         ``parallel`` controls concurrent dispatch of independent plan
         nodes (fused siblings, adjacent map ops with no def-use edge):
         default on when the context has a ``RequestScheduler``, off
         otherwise.  Dispatch never changes which tuples a node sees, so
-        results and request/token counts are identical either way."""
+        results and request/token counts are identical either way.
+
+        ``speculate`` opts ``llm_filter`` chains into concurrent
+        mask-join dispatch (``False`` off, ``True``/``"auto"``
+        cost-gated per chain, ``"always"`` forced); defaults to the
+        context's ``speculate`` knob.  Speculation preserves the
+        surviving tuple stream bit-for-bit but may issue extra requests
+        over tuples a serial chain would have eliminated — the expected
+        waste, predicted from recorded selectivity, is reported by
+        ``explain()`` and bounded by ``ctx.speculate_waste_cap``."""
         if parallel is None:
             parallel = self.ctx.scheduler is not None
-        nodes = self._plan().nodes if optimize else self.nodes
+        if speculate is None:
+            speculate = self.ctx.speculate
+        if optimize:
+            # remembered for explain(); an optimize=False run bypasses
+            # the optimizer entirely, so recording its speculate mode
+            # would make explain() describe a plan that never ran
+            self._last_speculate = speculate
+        nodes = self._plan(speculate).nodes if optimize else self.nodes
         self._executed_nodes = nodes
         self._executed_optimized = optimize
         t = self.source
@@ -263,15 +305,19 @@ class Pipeline:
                 if node.fn is not None:
                     before = len(self.ctx.reports)
                     t = node.fn(t)
-                    if len(self.ctx.reports) > before:
+                    # spec-chain members append reports from their own
+                    # threads and record the slots themselves; the main
+                    # thread's thread-local slot would be stale here
+                    if (len(self.ctx.reports) > before
+                            and "member_report_slots" not in node.info):
                         slot = self.ctx.last_report_slot()
                         node.report_slot = before if slot is None else slot
                     node.info["rows_out"] = len(t)
         finally:
-            # bookkeeping + debounced selectivity survive node errors:
+            # bookkeeping + debounced sidecars survive node errors:
             # earlier filters' observations would otherwise be lost
             self._last_reports = self.ctx.reports[base:]
-            self.ctx.flush_selectivity()
+            self.ctx.flush_stats()
         return t
 
     def reduce(self, model, prompt, cols: Sequence[str],
@@ -281,11 +327,25 @@ class Pipeline:
         return F.llm_reduce(self.ctx, model, prompt, tuples)
 
     # ---- plan inspection -----------------------------------------------------
+    def _render_report(self, lines, slot, indent="        "):
+        r = self.ctx.reports[slot]
+        sel = ("" if r.selectivity is None
+               else f" selectivity={r.selectivity:.2f}")
+        coal = ("" if not r.coalesced
+                else f" coalesced={r.coalesced}")
+        lines.append(
+            f"{indent}tuples={r.n_tuples} unique={r.n_unique} "
+            f"cache_hits={r.cache_hits} requests={r.requests} "
+            f"retries={r.retries} nulls={r.nulls} "
+            f"batch_sizes={r.batch_sizes[:8]} "
+            f"serialization={r.serialization}{sel}{coal}")
+
     def _render_nodes(self, lines, nodes, node_costs):
         for i, node in enumerate(nodes):
             info = {k: v for k, v in node.info.items()
                     if k not in ("model", "prompt", "prompts",
-                                 "prompt_ids")}
+                                 "prompt_ids", "member_specs",
+                                 "member_masks", "member_report_slots")}
             est = node_costs[i] if i < len(node_costs) else None
             est_s = ""
             if est and est["requests"]:
@@ -293,23 +353,27 @@ class Pipeline:
                          f"req={est['requests']} tok={est['tokens']}]")
             lines.append(f"  [{i}] {node.op:18s} {info}{est_s}")
             if node.report_slot is not None:
-                r = self.ctx.reports[node.report_slot]
-                sel = ("" if r.selectivity is None
-                       else f" selectivity={r.selectivity:.2f}")
-                coal = ("" if not r.coalesced
-                        else f" coalesced={r.coalesced}")
-                lines.append(
-                    f"        tuples={r.n_tuples} unique={r.n_unique} "
-                    f"cache_hits={r.cache_hits} requests={r.requests} "
-                    f"retries={r.retries} nulls={r.nulls} "
-                    f"batch_sizes={r.batch_sizes[:8]} "
-                    f"serialization={r.serialization}{sel}{coal}")
+                self._render_report(lines, node.report_slot)
+            for k, slot in enumerate(
+                    node.info.get("member_report_slots", ())):
+                if slot is not None:
+                    lines.append(f"        member[{k}]:")
+                    self._render_report(lines, slot, indent="          ")
 
-    def explain(self) -> str:
+    def explain(self, speculate=None) -> str:
         """Render the logical plan, the optimizer's rewritten plan, the
         fired rewrite rules, and both plans' estimated request/token
-        totals (paper Fig. 2b, now with the optimizer's decisions)."""
-        opt = self._plan()
+        totals (paper Fig. 2b, now with the optimizer's decisions).
+
+        With speculation on (``speculate`` argument, the last
+        ``collect()``'s mode, or the context knob — first set wins),
+        a "Speculation:" section reports each ``llm_filter`` chain's
+        serial-waves vs speculative-waves estimates, the calibrated
+        wall-clock predictions when execution statistics exist, and the
+        expected wasted-request budget."""
+        if speculate is None:
+            speculate = getattr(self, "_last_speculate", None)
+        opt = self._plan(speculate)
         lines = ["Pipeline plan (as written):"]
         self._render_nodes(lines, self.nodes, opt.naive_node_costs)
         lines.append(f"  estimated: {opt.naive_cost}")
@@ -322,6 +386,10 @@ class Pipeline:
                 lines.append(f"  - {rw}")
         else:
             lines.append("Rewrites applied: none")
+        if opt.spec_decisions:
+            lines.append("Speculation:")
+            for d in opt.spec_decisions:
+                lines.append(f"  - {d}")
         return "\n".join(lines)
 
 

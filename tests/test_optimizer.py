@@ -13,8 +13,8 @@ import re
 
 import pytest
 
-from repro.core import (MockProvider, SemanticContext, llm_multi,
-                        plan_batches, reset_global_catalog, run_adaptive)
+from repro.core import (MockProvider, SemanticContext, execute_serial,
+                        llm_multi, plan_batches, reset_global_catalog)
 from repro.core.batching import ContextOverflowError
 from repro.core.functions import _parse_permutation, _parse_rows
 from repro.engine import Pipeline, Table, optimize_plan
@@ -408,7 +408,7 @@ def test_plan_batches_oversized_singleton_isolated():
     assert all(i in [j for b in plan.batches for j in b] for i in (0, 1))
 
 
-def test_run_adaptive_overflow_shrink_path():
+def test_execute_serial_overflow_shrink_path():
     calls = []
 
     def call(batch):
@@ -417,20 +417,34 @@ def test_run_adaptive_overflow_shrink_path():
             raise ContextOverflowError("too big")
         return [f"v{i}" for i in batch]
 
-    results, stats = run_adaptive(list(range(10)), [1] * 10,
-                                  prefix_tokens=0, context_window=10_000,
-                                  max_output_tokens=1, call=call)
+    results, stats = execute_serial(list(range(10)), [1] * 10,
+                                    prefix_tokens=0, context_window=10_000,
+                                    max_output_tokens=1, call=call)
     assert results == [f"v{i}" for i in range(10)]
     assert stats.retries > 0 and stats.nulls == 0
     assert all(len(b) <= 2 for b in calls[-stats.requests:])
+    # successful requests record their wall latency (calibration feed)
+    assert len(stats.latencies) == stats.requests
 
 
-def test_run_adaptive_single_tuple_overflow_is_null():
+def test_execute_serial_single_tuple_overflow_is_null():
     def call(batch):
         raise ContextOverflowError("always")
 
-    results, stats = run_adaptive([0], [1], prefix_tokens=0,
-                                  context_window=10, max_output_tokens=1,
-                                  call=call)
+    results, stats = execute_serial([0], [1], prefix_tokens=0,
+                                    context_window=10, max_output_tokens=1,
+                                    call=call)
     assert results == [None]
     assert stats.nulls == 1
+
+
+def test_run_adaptive_alias_is_deprecated_but_works():
+    from repro.core import run_adaptive
+
+    with pytest.warns(DeprecationWarning, match="execute_serial"):
+        results, stats = run_adaptive([0, 1], [1, 1], prefix_tokens=0,
+                                      context_window=10_000,
+                                      max_output_tokens=1,
+                                      call=lambda b: [f"v{i}" for i in b])
+    assert results == ["v0", "v1"]
+    assert stats.requests == 1

@@ -12,8 +12,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (MockProvider, PredictionCache, SemanticContext,
-                        combanz, combmed, combmnz, combsum, llm_complete,
-                        plan_batches, rrf, run_adaptive)
+                        combanz, combmed, combmnz, combsum, execute_serial,
+                        llm_complete, plan_batches, rrf)
 from repro.core.batching import ContextOverflowError
 from repro.core.metaprompt import serialize_tuple
 from repro.retrieval import BM25Index
@@ -53,9 +53,9 @@ def test_adaptive_backoff_terminates_and_covers(n, cap):
             raise ContextOverflowError("too big")
         return [f"v{i}" for i in batch]
 
-    results, stats = run_adaptive(list(range(n)), costs, prefix_tokens=0,
-                                  context_window=10_000,
-                                  max_output_tokens=7, call=call)
+    results, stats = execute_serial(list(range(n)), costs, prefix_tokens=0,
+                                    context_window=10_000,
+                                    max_output_tokens=7, call=call)
     if 20 > cap:
         assert all(r is None for r in results)
         assert stats.nulls == n

@@ -313,7 +313,9 @@ def test_independent_nodes_overlap_wall_clock():
                 .llm_complete("b", model, {"prompt": "p2"}, ["text"])
                 .llm_complete("c", model, {"prompt": "p3"}, ["text"]))
 
-    ctx_s = SemanticContext(provider=MockProvider(latency_per_call_s=0.06),
+    # latency large enough that thread-wakeup noise under a loaded
+    # suite run cannot eat the 0.75x overlap margin
+    ctx_s = SemanticContext(provider=MockProvider(latency_per_call_s=0.12),
                             enable_cache=False)
     t0 = time.perf_counter()
     rows_s = build(ctx_s).collect(optimize=False).rows()
@@ -321,7 +323,7 @@ def test_independent_nodes_overlap_wall_clock():
 
     with RequestScheduler() as sched:
         ctx_c = SemanticContext(
-            provider=MockProvider(latency_per_call_s=0.06),
+            provider=MockProvider(latency_per_call_s=0.12),
             scheduler=sched, enable_cache=False)
         t0 = time.perf_counter()
         rows_c = build(ctx_c).collect(optimize=False).rows()
@@ -374,6 +376,75 @@ def test_dispatch_groups_respect_def_use_edges():
     groups = Pipeline._dispatch_groups([a, b, dep, flt])
     assert [len(g) for g in groups] == [2, 1, 1]
     assert groups[0] == [a, b]
+
+
+# ---------------------------------------------------------------------------
+# stress: speculative fan-out + concurrent map groups on ONE model
+# ---------------------------------------------------------------------------
+def test_mixed_speculative_and_map_load_respects_gates_no_starvation():
+    # a speculative filter-chain fan-out and several concurrently
+    # collected map pipelines all target the same model: the per-model
+    # max_concurrency gate must still bound in-flight requests, and
+    # every pipeline must complete (the gate's parking queue hands
+    # slots off fairly — no job starves behind the fan-out)
+    reset_global_catalog()
+    n = 30
+    table = Table({"text": [f"doc {i} {'join' if i % 2 else 'scan'} body"
+                            for i in range(n)]})
+    model = {"model": "shared", "context_window": 650,
+             "max_output_tokens": 8, "max_concurrency": 2}
+
+    def build_chain(ctx):
+        return (Pipeline(ctx, table, "chain")
+                .llm_filter(model, {"prompt": "is about joins"}, ["text"])
+                .llm_filter(model, {"prompt": "is long"}, ["text"]))
+
+    def build_map(ctx, k):
+        return (Pipeline(ctx, table, f"map{k}")
+                .llm_complete(f"out{k}", model, {"prompt": f"task {k}"},
+                              ["text"]))
+
+    # serial reference results (fresh context per pipeline: no cache
+    # sharing, so every run issues its own requests)
+    refs = {}
+    refs["chain"] = build_chain(
+        SemanticContext(provider=MockProvider())).collect(
+            speculate=False).rows()
+    for k in range(3):
+        refs[k] = build_map(
+            SemanticContext(provider=MockProvider()), k).collect().rows()
+
+    with RequestScheduler(max_workers=16) as sched:
+        ctx = SemanticContext(provider=MockProvider(
+            latency_per_call_s=0.005), scheduler=sched)
+        results, errors = {}, []
+
+        def run_chain():
+            try:
+                results["chain"] = build_chain(ctx).collect(
+                    speculate="always").rows()
+            except Exception as exc:        # noqa: BLE001 - recording
+                errors.append(exc)
+
+        def run_map(k):
+            try:
+                results[k] = build_map(ctx, k).collect().rows()
+            except Exception as exc:        # noqa: BLE001 - recording
+                errors.append(exc)
+
+        threads = [threading.Thread(target=run_chain)] + [
+            threading.Thread(target=run_map, args=(k,)) for k in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        stalled = [t for t in threads if t.is_alive()]
+    assert not stalled, "pipelines starved under mixed speculative load"
+    assert not errors, errors
+    assert sched.stats.max_inflight <= 2, \
+        f"max_concurrency gate violated: {sched.stats.max_inflight}"
+    for key, ref in refs.items():
+        assert results[key] == ref, f"pipeline {key} diverged"
 
 
 # ---------------------------------------------------------------------------

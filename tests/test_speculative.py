@@ -1,0 +1,443 @@
+"""Speculative filter-chain dispatch tests.
+
+The core contract: speculative execution of an ``llm_filter`` chain —
+all members evaluated concurrently over the chain INPUT, masks ANDed —
+produces a bit-identical surviving tuple stream and bit-identical
+per-member masks vs serial chain execution, across chain lengths,
+selectivities, and failure injections (overflow-poisoned tuples,
+malformed provider output).  Verified property-based (hypothesis).
+
+Also covered here: the calibrated speculation decision (waste cap,
+waves/wall comparison, explain() reporting) and the lifecycle of the
+``SelectivityStore``/``CalibrationStore`` sidecars (pruning on resource
+re-version, debounced flush on context exit, corrupt-sidecar recovery).
+"""
+
+import json
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import (CalibrationStore, MockProvider, PredictionCache,
+                        RequestScheduler, SemanticContext,
+                        reset_global_catalog)
+from repro.core import functions as F
+from repro.core.batching import ContextOverflowError
+from repro.core.resources import Catalog
+from repro.engine import Pipeline, Table
+
+try:        # property tests need the optional hypothesis dependency;
+            # the deterministic tests below run either way
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+    SMALL = settings(max_examples=25, deadline=None)
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _marker_behaviour(kind, prefix, rows):
+    """Deterministic content-based filter verdicts: prompt ``has P<k>``
+    passes rows carrying the ``P<k>`` marker.  Failure injections are
+    content-based too, so serial and speculative execution see the same
+    per-tuple dispositions regardless of batch composition:
+
+      * a ``BOOM`` row poisons any batch containing it with a context
+        overflow — the adaptive splitter isolates it and NULLs it
+        (decodes to False);
+      * a ``GIBBER`` row gets a malformed verdict (decodes to False).
+    """
+    if kind != "filter":
+        return None
+    if any("BOOM" in r for r in rows):
+        raise ContextOverflowError("poisoned row in batch")
+    marker = re.search(r"has (P\d+)", prefix).group(1)
+    out = []
+    for i, r in enumerate(rows):
+        if "GIBBER" in r:
+            out.append(f"{i}: maybe?!")
+        else:
+            out.append(f"{i}: {'true' if marker in r else 'false'}")
+    return out
+
+
+def _member_model(k: int, **kw) -> dict:
+    # distinct model per member: same-model chains would fuse into one
+    # multi-task pass before the speculation rule ever sees them
+    base = {"model": f"pm{k}", "context_window": 100_000,
+            "max_output_tokens": 8, "max_concurrency": 8}
+    base.update(kw)
+    return base
+
+
+def _chain_pipeline(ctx, table, n_filters, **model_kw):
+    pipe = Pipeline(ctx, table, "docs")
+    for k in range(n_filters):
+        pipe = pipe.llm_filter(_member_model(k, **model_kw),
+                               {"prompt": f"has P{k}"}, ["text"])
+    return pipe
+
+
+def _serial_reference(table, n_filters):
+    """Serial chain execution via the raw semantic functions: member k
+    sees only the survivors of members < k."""
+    ctx = SemanticContext(provider=MockProvider(_marker_behaviour))
+    surv = table
+    masks = []
+    for k in range(n_filters):
+        tuples = [{"text": r["text"]} for r in surv.rows()]
+        mask = F.llm_filter(ctx, _member_model(k), {"prompt": f"has P{k}"},
+                            tuples)
+        masks.append(mask)
+        surv = surv.filter_mask(mask)
+    return surv, masks
+
+
+# ---------------------------------------------------------------------------
+# property: speculative == serial, bit for bit
+# ---------------------------------------------------------------------------
+def _check_equivalence(n_filters, rows):
+    """Shared harness: build the table from (pass-bits, failure-kind,
+    dup) row descriptors, run serial and speculative execution, and
+    assert bit-identical survivors and per-member masks."""
+    texts = []
+    for i, (passes, kind, dup) in enumerate(rows):
+        tag = "" if dup else f"r{i} "
+        markers = " ".join(f"P{k}" for k in range(n_filters) if passes[k])
+        inject = {"ok": "", "boom": " BOOM", "gibber": " GIBBER"}[kind]
+        texts.append(f"{tag}doc {markers}{inject}")
+    table = Table({"text": texts})
+
+    ref, serial_masks = _serial_reference(table, n_filters)
+
+    with RequestScheduler(max_workers=8) as sched:
+        ctx = SemanticContext(provider=MockProvider(_marker_behaviour),
+                              scheduler=sched, speculate="always")
+        pipe = _chain_pipeline(ctx, table, n_filters)
+        out = pipe.collect()
+
+    assert out.rows() == ref.rows()
+
+    spec_nodes = [n for n in pipe._executed_nodes
+                  if n.op == "llm_spec_chain"]
+    assert len(spec_nodes) == 1, "chain was not speculated"
+    full = spec_nodes[0].info["member_masks"]
+    assert len(full) == n_filters
+    # each member's full-input mask, restricted to the tuples the serial
+    # chain would actually have shown it, must match the serial mask
+    alive = list(range(len(texts)))
+    for k in range(n_filters):
+        assert [full[k][i] for i in alive] == serial_masks[k]
+        alive = [i for i in alive if full[k][i]]
+    assert [r["text"] for r in out.rows()] == [texts[i] for i in alive]
+
+
+if HAVE_HYPOTHESIS:
+    @SMALL
+    @given(
+        n_filters=st.integers(2, 4),
+        rows=st.lists(
+            st.tuples(st.tuples(*[st.booleans()] * 4),
+                      st.sampled_from(["ok", "ok", "ok", "boom",
+                                       "gibber"]),
+                      st.booleans()),      # True -> duplicate-prone text
+            min_size=0, max_size=16))
+    def test_speculative_chain_equals_serial(n_filters, rows):
+        _check_equivalence(n_filters, rows)
+
+
+@pytest.mark.parametrize("n_filters,rows", [
+    # mixed pass patterns, no failures
+    (2, [((True, True, False, False), "ok", False),
+         ((False, True, False, False), "ok", False),
+         ((True, False, False, False), "ok", False)]),
+    # overflow-poisoned and malformed rows interleaved with duplicates
+    (3, [((True, True, True, False), "ok", False),
+         ((True, True, True, False), "boom", False),
+         ((True, True, True, False), "gibber", False),
+         ((True, False, True, False), "ok", True),
+         ((True, False, True, False), "ok", True),
+         ((False, False, False, False), "boom", True)]),
+    # empty input stream
+    (2, []),
+    # everything eliminated by the first member
+    (4, [((False, True, True, True), "ok", False)] * 5),
+])
+def test_speculative_chain_equals_serial_fixed_cases(n_filters, rows):
+    # deterministic spot checks of the same harness — these run even
+    # without the optional hypothesis dependency
+    _check_equivalence(n_filters, rows)
+
+
+def test_speculative_chain_without_scheduler_matches_serial():
+    # the mask-join runs members on dedicated threads, so speculation
+    # works (and stays equivalent) even on a scheduler-less context
+    texts = [f"r{i} doc {'P0' if i % 2 else ''} {'P1' if i % 3 else ''}"
+             for i in range(12)]
+    table = Table({"text": texts})
+    ref, _ = _serial_reference(table, 2)
+    ctx = SemanticContext(provider=MockProvider(_marker_behaviour))
+    out = _chain_pipeline(ctx, table, 2).collect(speculate="always")
+    assert out.rows() == ref.rows()
+
+
+def test_optimize_false_ignores_speculation():
+    table = Table({"text": [f"r{i} doc P0 P1" for i in range(6)]})
+    ctx = SemanticContext(provider=MockProvider(_marker_behaviour),
+                          speculate="always")
+    pipe = _chain_pipeline(ctx, table, 2)
+    out = pipe.collect(optimize=False)
+    assert all(n.op != "llm_spec_chain" for n in pipe._executed_nodes)
+    assert len(out) == 6
+
+
+# ---------------------------------------------------------------------------
+# the speculation decision (auto mode)
+# ---------------------------------------------------------------------------
+def _decision_ctx(**kw):
+    return SemanticContext(provider=MockProvider(_marker_behaviour),
+                           enable_cache=False, enable_dedup=False, **kw)
+
+
+def test_auto_speculates_when_waves_win():
+    # uncalibrated: decision falls back to the waves comparison — a
+    # 2-filter chain at high concurrency is 2 serial waves vs 1
+    table = Table({"text": [f"r{i} doc P0 P1" for i in range(20)]})
+    ctx = _decision_ctx(max_batch=5)
+    pipe = _chain_pipeline(ctx, table, 2)
+    plan = pipe._plan(True)
+    assert [d.chosen for d in plan.spec_decisions] == [True]
+    d = plan.spec_decisions[0]
+    assert d.spec_waves < d.serial_waves
+    assert d.serial_wall_s == 0.0 and d.spec_wall_s == 0.0
+    spec_ops = [n.op for n in plan.nodes]
+    assert "llm_spec_chain" in spec_ops
+
+
+def test_auto_rejects_when_waste_exceeds_cap():
+    # a near-perfectly selective first filter makes speculation waste
+    # almost every later request; a tight cap must reject the chain
+    table = Table({"text": [f"r{i} doc P1" for i in range(40)]})
+    ctx = _decision_ctx(max_batch=4, speculate_waste_cap=0.3)
+    ctx.record_selectivity("inline:has P0", 1, 100)     # ~1% pass rate
+    pipe = _chain_pipeline(ctx, table, 2)
+    plan = pipe._plan(True)
+    assert [d.chosen for d in plan.spec_decisions] == [False]
+    assert "exceeds cap" in plan.spec_decisions[0].reason
+    assert all(n.op != "llm_spec_chain" for n in plan.nodes)
+    # the rejected chain still executes serially and correctly
+    out = pipe.collect(speculate=True)
+    assert len(out) == 0
+
+
+def test_auto_uses_calibrated_wall_when_available():
+    # calibration for every member model flips the decision from waves
+    # to observed-latency wall estimates, reported on the decision
+    table = Table({"text": [f"r{i} doc P0 P1" for i in range(20)]})
+    ctx = _decision_ctx(max_batch=5)
+    for k in range(2):
+        ctx.record_calibration(f"pm{k}@0", requests=8, retries=0,
+                               tuples=40, latencies=[0.05] * 8)
+    plan = _chain_pipeline(ctx, table, 2)._plan(True)
+    d = plan.spec_decisions[0]
+    assert d.chosen
+    assert d.spec_wall_s > 0 and d.serial_wall_s > d.spec_wall_s
+    assert "calibrated wall" in d.reason
+    assert plan.optimized_cost.wall_s > 0
+    assert plan.optimized_cost.wasted_requests == d.wasted_requests
+
+
+def test_explain_reports_speculation_section():
+    table = Table({"text": [f"r{i} doc P0 P1" for i in range(20)]})
+    with RequestScheduler() as sched:
+        ctx = _decision_ctx(max_batch=5, scheduler=sched)
+        pipe = _chain_pipeline(ctx, table, 2)
+        pipe.collect(speculate=True)
+        text = pipe.explain()
+    assert "Speculation:" in text
+    assert "serial_waves=" in text and "spec_waves=" in text
+    assert "wasted<=" in text
+    assert "SPECULATE" in text
+    # per-member execution reports render under the spec-chain node
+    assert "member[0]:" in text and "member[1]:" in text
+
+
+def test_retry_rate_inflates_calibrated_request_estimate():
+    table = Table({"text": [f"r{i} doc P0" for i in range(20)]})
+    base = _decision_ctx(max_batch=5)
+    pipe = Pipeline(base, table).llm_filter(
+        _member_model(0), {"prompt": "has P0"}, ["text"])
+    clean = pipe._plan(False).optimized_cost.requests
+
+    noisy = _decision_ctx(max_batch=5)
+    noisy.record_calibration("pm0@0", requests=10, retries=5, tuples=50,
+                             latencies=[0.01] * 10)
+    pipe2 = Pipeline(noisy, table).llm_filter(
+        _member_model(0), {"prompt": "has P0"}, ["text"])
+    inflated = pipe2._plan(False).optimized_cost.requests
+    assert inflated > clean
+
+
+# ---------------------------------------------------------------------------
+# CalibrationStore lifecycle
+# ---------------------------------------------------------------------------
+def test_calibration_store_roundtrip_and_corruption(tmp_path):
+    store = CalibrationStore(str(tmp_path / "c.json"))
+    assert store.load() == {}
+    rec = {"m@1": {"requests": 4, "retries": 1, "tuples": 20,
+                   "latency_s": [0.1, 0.2]}}
+    store.save(rec)
+    assert store.load() == rec
+    (tmp_path / "c.json").write_text("{definitely not json")
+    assert store.load() == {}
+    # invalid records are dropped, valid ones kept
+    (tmp_path / "c.json").write_text(json.dumps({"models": {
+        "good@1": {"requests": 1, "retries": 0, "tuples": 2,
+                   "latency_s": [0.5]},
+        "bad1": {"requests": -3, "retries": 0, "tuples": 0,
+                 "latency_s": []},
+        "bad2": {"requests": 1, "retries": 0, "tuples": 1,
+                 "latency_s": "oops"},
+    }}))
+    assert set(store.load()) == {"good@1"}
+
+
+def test_calibration_persists_across_sessions(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    rows = [{"t": f"row {i}"} for i in range(8)]
+    model = {"model": "m", "context_window": 8192, "max_output_tokens": 8}
+    with SemanticContext(
+            cache=PredictionCache(persist_path=cache_path)) as ctx1:
+        F.llm_complete(ctx1, model, {"prompt": "p"}, rows)
+        assert ctx1.calibrated_latency("m@0") is not None
+    assert (tmp_path / "cache.jsonl.calibration.json").exists()
+
+    ctx2 = SemanticContext(cache=PredictionCache(persist_path=cache_path))
+    assert ctx2.calibrated_latency("m@0") is not None
+    assert ctx2.calibration_stats["m@0"]["requests"] >= 1
+
+
+def test_calibration_pruned_on_model_version_bump(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    catalog = Catalog()
+    catalog.create_model("m", arch="mock")
+    with SemanticContext(
+            catalog=catalog,
+            cache=PredictionCache(persist_path=cache_path)) as ctx1:
+        ctx1.record_calibration("m@1", requests=3, retries=0, tuples=9,
+                                latencies=[0.1, 0.1, 0.1])
+
+    catalog.update_model("m", context_window=9999)      # now m@2
+    ctx2 = SemanticContext(catalog=catalog,
+                           cache=PredictionCache(persist_path=cache_path))
+    assert "m@1" not in ctx2.calibration_stats
+    assert ctx2.calibrated_latency("m@1") is None
+    # inline-spec refs (version 0, not in the catalog) survive pruning
+    with SemanticContext(
+            catalog=catalog,
+            cache=PredictionCache(persist_path=cache_path)) as ctx3:
+        ctx3.record_calibration("inline-model@0", requests=1, retries=0,
+                                tuples=2, latencies=[0.2])
+    ctx4 = SemanticContext(catalog=catalog,
+                           cache=PredictionCache(persist_path=cache_path))
+    assert "inline-model@0" in ctx4.calibration_stats
+
+
+def test_calibration_latency_window_bounded(tmp_path):
+    from repro.core.cache import CALIBRATION_WINDOW
+    ctx = SemanticContext()
+    for _ in range(5):
+        ctx.record_calibration("m@1", requests=100, retries=0,
+                               tuples=100, latencies=[0.01] * 100)
+    assert len(ctx.calibration_stats["m@1"]["latency_s"]) \
+        == CALIBRATION_WINDOW
+    assert ctx.calibration_stats["m@1"]["requests"] == 500
+
+
+def test_calibrated_latency_percentiles():
+    ctx = SemanticContext()
+    ctx.record_calibration("m@1", requests=4, retries=0, tuples=8,
+                           latencies=[0.1, 0.2, 0.3, 0.4])
+    assert ctx.calibrated_latency("m@1") == pytest.approx(0.25)
+    assert ctx.calibrated_latency("m@1", pct=100) == pytest.approx(0.4)
+    assert ctx.calibrated_latency("missing@1") is None
+    assert ctx.calibrated_retry_rate("missing@1") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# debounced flush on context exit + corrupt-sidecar recovery
+# ---------------------------------------------------------------------------
+def test_debounced_stats_flush_on_context_exit(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    sel_path = tmp_path / "cache.jsonl.selectivity.json"
+    cal_path = tmp_path / "cache.jsonl.calibration.json"
+    with SemanticContext(
+            cache=PredictionCache(persist_path=cache_path)) as ctx:
+        # first write lands immediately (debounce window starts), the
+        # second is deferred inside the interval
+        ctx.record_selectivity("p@1", 1, 2)
+        ctx.record_selectivity("p@1", 1, 2)
+        ctx.record_calibration("m@1", requests=1, retries=0, tuples=2,
+                               latencies=[0.1])
+        ctx.record_calibration("m@1", requests=1, retries=0, tuples=2,
+                               latencies=[0.2])
+        assert json.loads(sel_path.read_text())["stats"]["p@1"] == [1, 2]
+        assert json.loads(cal_path.read_text())["models"]["m@1"][
+            "requests"] == 1
+    # context exit force-flushes both deferred observations
+    assert json.loads(sel_path.read_text())["stats"]["p@1"] == [2, 4]
+    assert json.loads(cal_path.read_text())["models"]["m@1"][
+        "requests"] == 2
+
+
+def test_corrupt_sidecars_recover_to_empty(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    (tmp_path / "cache.jsonl.selectivity.json").write_text("<not json>")
+    (tmp_path / "cache.jsonl.calibration.json").write_text("[1, 2, 3]")
+    ctx = SemanticContext(cache=PredictionCache(persist_path=cache_path))
+    assert ctx.selectivity_stats == {}
+    assert ctx.calibration_stats == {}
+    # and the session can record + overwrite the corrupt files
+    with ctx:
+        ctx.record_selectivity("p@1", 1, 4)
+        ctx.record_calibration("m@1", requests=1, retries=0, tuples=1,
+                               latencies=[0.1])
+    ctx2 = SemanticContext(cache=PredictionCache(persist_path=cache_path))
+    assert ctx2.selectivity_stats == {"p@1": [1, 4]}
+    assert ctx2.calibration_stats["m@1"]["requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+def test_execution_reports_carry_latencies():
+    ctx = SemanticContext(provider=MockProvider())
+    F.llm_complete(ctx, {"model": "m", "context_window": 8192,
+                         "max_output_tokens": 8},
+                   {"prompt": "p"}, [{"t": f"row {i}"} for i in range(6)])
+    rep = ctx.last_report()
+    assert rep.requests >= 1
+    assert len(rep.latencies) == rep.requests
+    assert all(isinstance(x, float) and x >= 0 for x in rep.latencies)
+    assert np.isfinite(ctx.calibrated_latency("m@0"))
+
+
+@pytest.mark.parametrize("scheduled", [False, True])
+def test_embedding_dispatch_feeds_calibration(scheduled):
+    # both embedding dispatch paths (serial loop and scheduler) must
+    # fold their stats into the calibration sidecar like the chat path
+    sched = RequestScheduler() if scheduled else None
+    try:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched)
+        F.llm_embedding(ctx, {"model": "e", "embedding_dim": 8},
+                        [f"passage {i}" for i in range(5)])
+    finally:
+        if sched is not None:
+            sched.shutdown()
+    assert ctx.calibration_stats["e@0"]["requests"] >= 1
+    assert np.isfinite(ctx.calibrated_latency("e@0"))
