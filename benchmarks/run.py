@@ -17,6 +17,11 @@ reproduced here:
     chain: k serial round-trips collapse to ~1, wasted requests within
     the selectivity-predicted budget, calibrated explain() wall-clock
     estimate within tolerance of measured; emits BENCH_speculative.json)
+  * cross-node batch co-packing -> bench_copack (two map nodes sharing
+    a metaprompt prefix: part-filled tail batches merge, mean batch
+    fill strictly higher / requests strictly lower, bit-identical rows;
+    plus the calibration-aware headroom loop: observed overflow retries
+    shrink the next session's planned batches; emits BENCH_copack.json)
   * Query 3 hybrid search -> bench_hybrid_search
   * serving engine -> bench_continuous_batching
   * kernels -> bench_kernel_* (interpret-mode correctness-path timing; the
@@ -376,6 +381,133 @@ def bench_speculative():
     return speedup
 
 
+def bench_copack():
+    """Cross-node batch co-packing: two map nodes sharing one metaprompt
+    prefix (same model + prompt + kind over different columns) dispatch
+    concurrently; with co-packing their part-filled tail batches merge
+    into one provider request.  Asserts:
+
+      * collected rows are bit-identical with co-packing on vs off,
+      * total provider requests are strictly LOWER with co-packing on,
+      * mean dispatched batch fill (tuples per request) is strictly
+        HIGHER with co-packing on,
+      * explain() reports the packed request estimate (packed_req <
+        requests).
+
+    Also measures the calibration-aware headroom loop on a tight-window
+    workload: session 1 overflows (token estimates undercount the
+    serialization framing) and records retries; session 2 loads the
+    calibration sidecar, plans with headroom, and pays fewer
+    split-and-requeue retries.
+    """
+    import tempfile
+
+    from repro.core import (MockProvider, PredictionCache,
+                            RequestScheduler, SemanticContext,
+                            llm_complete)
+    from repro.engine import Pipeline, Table
+
+    n = 60
+    max_batch = 24          # 60 rows -> [24, 24, 12]: part-filled tail
+    table = Table({
+        "a": [f"first column text number {i} with a body of text"
+              for i in range(n)],
+        "b": [f"second column text number {i} with a body of text"
+              for i in range(n)],
+    })
+    model = {"model": "cp", "context_window": 100_000,
+             "max_output_tokens": 8, "max_concurrency": 8}
+
+    def build(ctx):
+        return (Pipeline(ctx, table, "docs")
+                .llm_complete("s1", model, {"prompt": "summarize"}, ["a"])
+                .llm_complete("s2", model, {"prompt": "summarize"},
+                              ["b"]))
+
+    runs = {}
+    explain_text = None
+    packed_est = None
+    for copack in (False, True):
+        with RequestScheduler(pack_linger_s=0.5) as sched:
+            ctx = SemanticContext(
+                provider=MockProvider(latency_per_call_s=0.01),
+                scheduler=sched, max_batch=max_batch, copack=copack)
+            pipe = build(ctx)
+            t0 = time.perf_counter()
+            rows = pipe.collect(optimize=False).rows()
+            dt = time.perf_counter() - t0
+            tuples = sum(sum(r.batch_sizes) for r in ctx.reports)
+            runs[copack] = {
+                "rows": rows, "wall_s": dt,
+                "requests": ctx.provider.stats.calls,
+                "tuples_dispatched": tuples,
+                "mean_fill": tuples / max(ctx.provider.stats.calls, 1),
+                "packed_requests": sched.stats.packed_requests,
+                "packed_batches": sched.stats.packed_batches,
+            }
+            if copack:
+                explain_text = pipe.explain()
+                plan = pipe._plan()
+                packed_est = plan.optimized_cost.packed_requests
+                est_requests = plan.optimized_cost.requests
+
+    off, on = runs[False], runs[True]
+    assert on["rows"] == off["rows"], \
+        "co-packing changed the collected rows"
+    assert on["requests"] < off["requests"], \
+        f"expected strictly fewer requests with co-packing, got " \
+        f"{on['requests']} vs {off['requests']}"
+    assert on["mean_fill"] > off["mean_fill"], \
+        f"expected strictly denser batches with co-packing, got " \
+        f"{on['mean_fill']:.2f} vs {off['mean_fill']:.2f}"
+    assert packed_est and packed_est < est_requests, \
+        "explain() must report a packed request estimate below the " \
+        "unpacked one"
+    assert "packed_req=" in explain_text
+
+    # calibration-aware headroom: overflow retries feed back into the
+    # planner as a smaller budget the NEXT session
+    with tempfile.TemporaryDirectory() as td:
+        cache_path = f"{td}/cache.jsonl"
+        tight = {"model": "tight", "context_window": 260,
+                 "max_output_tokens": 2}
+        retries = []
+        for tag in ("alpha", "beta"):
+            ctx = SemanticContext(
+                cache=PredictionCache(persist_path=cache_path),
+                provider=MockProvider(), enable_dedup=False)
+            with ctx:
+                llm_complete(ctx, tight, {"prompt": "p"},
+                             [{"t": f"{tag} row {i} and padding {i}"}
+                              for i in range(48)])
+            retries.append(ctx.last_report().retries)
+    assert retries[0] > 0 and retries[1] < retries[0], \
+        f"headroom did not reduce overflow retries: {retries}"
+
+    results = {
+        "rows": n, "nodes": 2, "max_batch": max_batch,
+        "copack_off": {k: v for k, v in off.items() if k != "rows"},
+        "copack_on": {k: v for k, v in on.items() if k != "rows"},
+        "packed_request_estimate": packed_est,
+        "headroom": {"session1_retries": retries[0],
+                     "session2_retries": retries[1]},
+    }
+    for r in (results["copack_off"], results["copack_on"]):
+        r["wall_s"] = round(r["wall_s"], 4)
+        r["mean_fill"] = round(r["mean_fill"], 2)
+    out_path = Path(__file__).resolve().parent / "BENCH_copack.json"
+    out_path.write_text(json.dumps(results, indent=1))
+
+    _row("copack_off", off["wall_s"] * 1e6 / n,
+         f"requests={off['requests']} fill={off['mean_fill']:.1f}")
+    _row("copack_on", on["wall_s"] * 1e6 / n,
+         f"requests={on['requests']} fill={on['mean_fill']:.1f} "
+         f"packed_req_est={packed_est} json={out_path.name}")
+    _row("copack_headroom", 0.0,
+         f"retries_session1={retries[0]} retries_session2={retries[1]}")
+    return off["requests"] / on["requests"]
+
+
 def bench_caching():
     from repro.core import MockProvider, SemanticContext, llm_complete
     rows = [{"r": f"text {i}"} for i in range(100)]
@@ -522,6 +654,7 @@ _ALL_BENCHES = {
     "optimizer": bench_optimizer,
     "scheduler": bench_scheduler,
     "speculative": bench_speculative,
+    "copack": bench_copack,
     "caching": bench_caching,
     "dedup": bench_dedup,
     "fusion_methods": bench_fusion_methods,

@@ -30,6 +30,18 @@ def cache_key(model_ref: str, prompt_key: str, function: str,
 _COMPACT_MIN_LINES = 4096
 
 
+def _tmp_path(path: Path) -> Path:
+    """Atomic-replace staging name: the FULL filename + ``.tmp``.
+
+    ``path.with_suffix(".tmp")`` strips only the last suffix, so
+    multi-dot sidecar paths get mangled (``cache.jsonl.selectivity``
+    -> ``cache.jsonl.tmp``) and sidecars sharing a prefix would stage
+    through the SAME temp file and corrupt each other's atomic
+    replace.  Appending to the full name keeps staging files unique
+    per destination."""
+    return path.with_name(path.name + ".tmp")
+
+
 class PredictionCache:
     def __init__(self, capacity: int = 100_000,
                  persist_path: Optional[str] = None):
@@ -90,7 +102,7 @@ class PredictionCache:
         if not self._persist_path:
             return
         with self._lock:
-            tmp = self._persist_path.with_suffix(".tmp")
+            tmp = _tmp_path(self._persist_path)
             with tmp.open("w") as f:
                 for k, v in self._data.items():
                     f.write(json.dumps({"k": k, "v": v}) + "\n")
@@ -118,6 +130,26 @@ class PredictionCache:
         with self._lock:
             self._data.clear()
             self.hits = self.misses = 0
+
+
+# bounded observation window for selectivity statistics: once a prompt's
+# recorded total exceeds this many tuples the counters are rescaled down,
+# so recent observations carry at least 1/WINDOW of the weight and a
+# shifted data distribution re-learns within ~one window instead of
+# fighting an unbounded historical average (speculative waste budgets
+# and filter ordering depend on the estimate tracking the CURRENT data)
+SELECTIVITY_WINDOW = 1024
+
+
+def bound_observations(passed: int, total: int,
+                       window: int = SELECTIVITY_WINDOW
+                       ) -> tuple[int, int]:
+    """Rescale an aggregate (passed, total) pair so ``total`` never
+    exceeds ``window`` — exponential forgetting with bounded weight."""
+    if total <= window:
+        return passed, total
+    scale = window / total
+    return min(window, int(round(passed * scale))), window
 
 
 class SelectivityStore:
@@ -149,12 +181,14 @@ class SelectivityStore:
             if (isinstance(obs, list) and len(obs) == 2
                     and all(isinstance(x, int) and x >= 0 for x in obs)
                     and obs[0] <= obs[1]):
-                out[pid] = [obs[0], obs[1]]
+                # sidecars written before windowing may carry unbounded
+                # totals; bound them on load so drift detection applies
+                out[pid] = list(bound_observations(obs[0], obs[1]))
         return out
 
     def save(self, stats: dict[str, list]):
         with self._lock:
-            tmp = self.path.with_suffix(".tmp")
+            tmp = _tmp_path(self.path)
             tmp.write_text(json.dumps({"stats": stats}, indent=1))
             tmp.replace(self.path)
 
@@ -177,6 +211,32 @@ class SelectivityStore:
 # per-model latency observations kept in the calibration sidecar: enough
 # for stable percentiles without the file growing with every request
 CALIBRATION_WINDOW = 256
+
+# request/retry counters are bounded the same way as selectivity: beyond
+# this many admissions the counters rescale, so a model whose overflow
+# behaviour changed (bigger window, fixed serialization) re-learns its
+# headroom instead of dragging historical retries forever
+CALIBRATION_COUNT_WINDOW = 4096
+
+# calibration-aware batch sizing: floor and activation threshold for the
+# planning headroom derived from observed overflow-retry rates
+HEADROOM_MIN = 0.5          # never plan below half the context budget
+HEADROOM_MIN_OBS = 8        # admissions needed before trusting the rate
+
+
+def headroom_factor(requests: int, retries: int) -> float:
+    """Per-model batch-planning headroom from observed overflow retries.
+
+    A retry means an admitted batch exceeded the provider's real budget
+    — the planner's token estimates undercount by roughly the overflow
+    fraction (serialization framing, id wrappers), so shaving the
+    planned budget by the observed retry rate removes most splits up
+    front.  Returns 1.0 (full budget) until enough admissions exist to
+    trust the rate, floored at ``HEADROOM_MIN``."""
+    total = requests + retries
+    if total < HEADROOM_MIN_OBS or retries <= 0:
+        return 1.0
+    return max(HEADROOM_MIN, 1.0 - retries / total)
 
 
 class CalibrationStore:
@@ -235,7 +295,7 @@ class CalibrationStore:
 
     def save(self, stats: dict[str, dict]):
         with self._lock:
-            tmp = self.path.with_suffix(".tmp")
+            tmp = _tmp_path(self.path)
             tmp.write_text(json.dumps({"models": stats}, indent=1))
             tmp.replace(self.path)
 

@@ -40,8 +40,9 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .cache import (CALIBRATION_WINDOW, CalibrationStore, PredictionCache,
-                    SelectivityStore, cache_key)
+from .cache import (CALIBRATION_COUNT_WINDOW, CALIBRATION_WINDOW,
+                    CalibrationStore, PredictionCache, SelectivityStore,
+                    bound_observations, cache_key, headroom_factor)
 from .metaprompt import (build_metaprompt, build_multi_task, build_prefix,
                          serialize_tuple)
 from .provider import BaseProvider, MockProvider, estimate_tokens
@@ -65,6 +66,7 @@ class ExecutionReport:
     chosen_batch_size: str = "auto"
     selectivity: Optional[float] = None   # filter calls: pass rate
     coalesced: int = 0    # keys served by another job's in-flight request
+    packed: int = 0       # tail batches that rode another job's request
     # wall seconds per successful provider request (completion order);
     # aggregated into the CalibrationStore for the calibrated cost model
     latencies: List[float] = field(default_factory=list)
@@ -82,7 +84,8 @@ class SemanticContext:
                  scheduler: Optional[RequestScheduler] = None,
                  selectivity_path: Optional[str] = None,
                  speculate=False, speculate_waste_cap: float = 1.0,
-                 calibration_path: Optional[str] = None):
+                 calibration_path: Optional[str] = None,
+                 copack: bool = True):
         self.catalog = catalog or Catalog()
         self.provider = provider or MockProvider()
         self.cache = cache or PredictionCache()
@@ -102,6 +105,16 @@ class SemanticContext:
         # to at most cap x the serial chain's request count.
         self.speculate = speculate
         self.speculate_waste_cap = speculate_waste_cap
+        # cross-node batch co-packing: part-filled tail batches from
+        # concurrently-dispatched map nodes that share a (model,
+        # metaprompt-prefix) identity merge into one provider request.
+        # copack=False is the escape hatch (results are bit-identical
+        # either way; only request density changes).
+        self.copack = copack
+        # prefix identities currently eligible for co-packing: managed
+        # by Pipeline._run_group (only node groups that actually contain
+        # >= 2 same-prefix nodes pay the packing-queue linger)
+        self._copack_active: Dict[Any, int] = {}
         self.reports: List[ExecutionReport] = []
         self._lock = threading.Lock()
         # selectivity gets its own lock: its save() does file I/O, which
@@ -143,6 +156,15 @@ class SemanticContext:
         if self.calibration_store is not None:
             self.calibration_stats.update(CalibrationStore.prune_stale(
                 self.calibration_store.load(), self.catalog))
+        # calibration-aware batch sizing: per-model planning headroom is
+        # SNAPSHOT from the loaded statistics (a model that routinely
+        # overflowed last session plans smaller batches up front this
+        # session) and stays fixed within the session — recomputing it
+        # mid-flight would make concurrently-dispatched nodes' batch
+        # plans depend on scheduling order, breaking determinism
+        self._headroom: Dict[str, float] = {
+            ref: headroom_factor(rec["requests"], rec["retries"])
+            for ref, rec in self.calibration_stats.items()}
 
     # ---- report bookkeeping (thread-safe: nodes may run concurrently) ------
     def add_report(self, rep: ExecutionReport):
@@ -164,6 +186,31 @@ class SemanticContext:
         contexts."""
         return getattr(self._tl, "last_report_slot", None)
 
+    # ---- co-packing eligibility (managed by Pipeline._run_group) -----------
+    def copack_begin(self, identities):
+        """Mark prefix identities as co-packable for the duration of a
+        concurrent node-group dispatch (re-entrant: counted)."""
+        with self._lock:
+            for ident in identities:
+                self._copack_active[ident] = \
+                    self._copack_active.get(ident, 0) + 1
+
+    def copack_end(self, identities):
+        with self._lock:
+            for ident in identities:
+                n = self._copack_active.get(ident, 0) - 1
+                if n <= 0:
+                    self._copack_active.pop(ident, None)
+                else:
+                    self._copack_active[ident] = n
+
+    def copack_eligible(self, identity) -> bool:
+        if not (self.copack and self.scheduler is not None
+                and self.enable_batching):
+            return False
+        with self._lock:
+            return identity in self._copack_active
+
     # ---- selectivity bookkeeping (filter reordering) -----------------------
     def record_selectivity(self, prompt_id: str, passed: int, total: int):
         if total <= 0:
@@ -174,6 +221,10 @@ class SemanticContext:
             s = self.selectivity_stats.setdefault(prompt_id, [0, 0])
             s[0] += passed
             s[1] += total
+            # bounded observation window (drift detection): rescale so
+            # old observations decay and a shifted distribution
+            # re-learns within ~one window
+            s[0], s[1] = bound_observations(s[0], s[1])
             self._sel_dirty = True
             self._save_selectivity_locked()
 
@@ -217,6 +268,14 @@ class SemanticContext:
             rec["requests"] += requests
             rec["retries"] += retries
             rec["tuples"] += tuples
+            # bounded counters: beyond the window old admissions decay,
+            # so retry rate and mean batch size track the model's
+            # CURRENT behaviour (headroom re-learns after a fix)
+            total = rec["requests"] + rec["retries"]
+            if total > CALIBRATION_COUNT_WINDOW:
+                scale = CALIBRATION_COUNT_WINDOW / total
+                for k in ("requests", "retries", "tuples"):
+                    rec[k] = int(round(rec[k] * scale))
             rec["latency_s"].extend(float(x) for x in latencies)
             del rec["latency_s"][:-CALIBRATION_WINDOW]
             self._cal_dirty = True
@@ -270,6 +329,23 @@ class SemanticContext:
             return 0.0
         total = rec["requests"] + rec["retries"]
         return rec["retries"] / total if total else 0.0
+
+    def batch_headroom(self, model_ref: str) -> float:
+        """Planning headroom for ``plan_batches`` — the calibration
+        feedback path.  Snapshot at session start from the persisted
+        execution statistics (see ``__init__``); 1.0 (full budget) for
+        models with no recorded overflow history."""
+        return self._headroom.get(model_ref, 1.0)
+
+    def refresh_headroom(self):
+        """Recompute the per-model headroom snapshot from the current
+        in-session calibration statistics.  Call between plan executions
+        (never mid-dispatch) — e.g. after a warmup pass in a benchmark —
+        to apply observed retry rates without a session restart."""
+        with self._cal_lock:
+            self._headroom = {
+                ref: headroom_factor(rec["requests"], rec["retries"])
+                for ref, rec in self.calibration_stats.items()}
 
     # ---- lifecycle ---------------------------------------------------------
     def __enter__(self):
@@ -370,28 +446,40 @@ def _cache_stage(ctx: SemanticContext, keys: Sequence[str],
 def _dispatch_stage(ctx: SemanticContext, model: ModelResource,
                     todo: List[int], keys: Sequence[str],
                     costs: List[int], prefix_tokens: int, call,
-                    rep: ExecutionReport) -> list:
-    """Stage 3 — run the misses: batch-plan, then either hand the batches
-    to the concurrent scheduler (overlapped per-model in-flight requests,
-    single-flight key dedup, overflow split-and-requeue inside the
-    engine) or fall back to the serial adaptive loop.  Both paths see
-    identical batch plans and produce identical results and counts."""
+                    rep: ExecutionReport, pack_key=None, pack_rows=None,
+                    pack_call=None) -> list:
+    """Stage 3 — run the misses: batch-plan (with the model's calibrated
+    headroom), then either hand the batches to the concurrent scheduler
+    (overlapped per-model in-flight requests, single-flight key dedup,
+    overflow split-and-requeue inside the engine) or fall back to the
+    serial adaptive loop.  Both paths see identical batch plans and
+    produce identical results and counts.  With a co-packable prefix
+    identity active (``ctx.copack_eligible``), the scheduler may merge
+    this dispatch's part-filled tail batch with another same-prefix
+    job's — fewer, denser requests, same per-row results."""
     mb = ctx.max_batch if ctx.enable_batching else 1
+    headroom = (ctx.batch_headroom(model.ref) if ctx.enable_batching
+                else 1.0)
     window = (model.context_window if ctx.enable_batching
               else prefix_tokens + max(costs) + model.max_output_tokens + 1)
     if ctx.scheduler is not None:
+        pack_kw = {}
+        if pack_key is not None and ctx.copack_eligible(pack_key):
+            pack_kw = dict(pack_key=pack_key, pack_rows=pack_rows,
+                           pack_call=pack_call)
         job = ctx.scheduler.submit_map(
             model, [keys[i] for i in todo], costs, prefix_tokens, call,
             cache=ctx.cache if ctx.enable_cache else None,
             max_batch=mb, context_window=window,
-            single_flight=ctx.enable_cache)
+            single_flight=ctx.enable_cache, headroom=headroom, **pack_kw)
         out, stats = job.result()
         rep.coalesced = job.coalesced
         rep.cache_hits += job.late_hits
+        rep.packed = stats.packed
     else:
         out, stats = execute_serial(todo, costs, prefix_tokens, window,
                                     model.max_output_tokens, call,
-                                    max_batch=mb)
+                                    max_batch=mb, headroom=headroom)
         if ctx.enable_cache:
             for j, i in enumerate(todo):
                 if out[j] is not None:
@@ -428,15 +516,29 @@ def _map_core(ctx: SemanticContext, kind: str, model: ModelResource,
         prefix_tokens = estimate_tokens(prefix)
         costs = [estimate_tokens(order[i]) for i in todo]
 
-        def call(batch_idx: List[int]) -> List[Optional[str]]:
-            rows = [uniq_tuples[todo[j]] for j in batch_idx]
+        # prefix identity: dispatches sharing this tuple render the SAME
+        # static metaprompt prefix AND execute under the same model
+        # limits, so their rows can ride one request (the scheduler's
+        # co-packing stage; pipeline.copack_identity computes the
+        # identical tuple from a plan node).  The provider instance and
+        # the FULL resolved model (frozen dataclass — inline specs that
+        # differ only in caps must not alias) are part of the identity.
+        pack_key = (id(ctx.provider), model, kind, ctx.serialization,
+                    prompt_text)
+        pack_rows = [uniq_tuples[todo[j]] for j in range(len(todo))]
+
+        def pack_call(rows: List[dict]) -> List[Optional[str]]:
             mp = build_metaprompt(kind, prompt_text, rows,
                                   ctx.serialization)
             raw = ctx.provider.complete(model, mp, len(rows))
             return _parse_rows(raw, len(rows))
 
+        def call(batch_idx: List[int]) -> List[Optional[str]]:
+            return pack_call([uniq_tuples[todo[j]] for j in batch_idx])
+
         out = _dispatch_stage(ctx, model, todo, keys, costs, prefix_tokens,
-                              call, rep)
+                              call, rep, pack_key=pack_key,
+                              pack_rows=pack_rows, pack_call=pack_call)
         for j, i in enumerate(todo):
             results[i] = out[j]
 

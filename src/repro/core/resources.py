@@ -185,7 +185,10 @@ class Catalog:
             "prompts": {n: [asdict(r) for r in v]
                         for n, v in self._prompts.all().items()},
         }
-        tmp = self._path.with_suffix(".tmp")
+        # full-name staging (path.name + ".tmp"): .with_suffix would
+        # collide for multi-dot paths — see cache._tmp_path
+        from .cache import _tmp_path
+        tmp = _tmp_path(self._path)
         tmp.write_text(json.dumps(data, indent=1))
         tmp.replace(self._path)
 

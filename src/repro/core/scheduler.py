@@ -20,6 +20,16 @@ Pieces:
   * single-flight dedup — identical cache keys submitted by concurrent
     jobs issue ONE provider request; late submitters attach to the
     in-flight entry and read its value when it resolves.
+  * co-packing stage — jobs submitted via ``submit_map`` with a pack
+    identity (model + metaprompt prefix) park their part-filled TAIL
+    batch in a short-lived per-(model, prefix) packing queue instead of
+    dispatching it immediately; tails from different jobs that share
+    the prefix merge into one provider request (results demultiplexed
+    back to each owning job), so the context window stays dense when
+    many plan nodes dispatch concurrently.  A parked tail with no
+    partner flushes after ``pack_linger_s`` and executes exactly as it
+    would have unpacked; per-tuple results are independent of batch
+    composition, so merged execution is bit-identical to unpacked.
   * ``SpeculativeMaskJoin`` — the mask-join dispatch group behind the
     optimizer's speculative filter chains: fans every ``llm_filter``
     chain member out over the chain's input stream concurrently and
@@ -60,14 +70,15 @@ def execute_serial(indices: Sequence, token_costs: Sequence[int],
                    prefix_tokens: int, context_window: int,
                    max_output_tokens: int,
                    call: Callable[[List[int]], list],
-                   max_batch: int = 0) -> tuple[list, BatchStats]:
+                   max_batch: int = 0,
+                   headroom: float = 1.0) -> tuple[list, BatchStats]:
     """The scheduler-free fallback: plan batches, run them one at a time
     under the adaptive overflow protocol.  ``call(positions)`` receives
     positions into ``indices`` and returns per-position results."""
     results: list = [None] * len(indices)
     stats = BatchStats()
     plan = plan_batches(token_costs, prefix_tokens, context_window,
-                        max_output_tokens, max_batch)
+                        max_output_tokens, max_batch, headroom=headroom)
     work = list(plan.batches)
     while work:
         batch = work.pop(0)
@@ -162,6 +173,46 @@ class _ModelGate:
             return None
 
 
+# co-packing thresholds: a tail batch enters the packing queue only when
+# its fill fraction leaves room worth merging into, and a merged batch
+# this full dispatches immediately instead of waiting out the linger
+_PACK_FILL_MAX = 0.85
+_PACK_FLUSH_FILL = 0.9
+
+
+class _PackSegment:
+    """One job's parked tail batch inside a pending co-pack."""
+    __slots__ = ("job", "positions", "rows", "weight")
+
+    def __init__(self, job, positions, rows, weight):
+        self.job = job
+        self.positions = positions      # job-local positions (into keys)
+        self.rows = rows                # provider-facing row payloads
+        self.weight = weight            # budget weight (prompt + output)
+
+
+class _PendingPack:
+    """A short-lived per-(model, prefix) packing-queue entry: part-filled
+    tail batches accumulate here until the merged batch is dense enough
+    or the linger window expires."""
+    __slots__ = ("key", "model", "budget", "max_batch", "call",
+                 "segments", "tokens", "flushed", "timer")
+
+    def __init__(self, key, model, budget, max_batch, call, segment):
+        self.key = key
+        self.model = model
+        self.budget = budget
+        self.max_batch = max_batch
+        self.call = call                # rows -> per-row results
+        self.segments: List[_PackSegment] = [segment]
+        self.tokens = segment.weight
+        self.flushed = False
+        self.timer: Optional[threading.Timer] = None
+
+    def size(self) -> int:
+        return sum(len(s.positions) for s in self.segments)
+
+
 @dataclass
 class SchedulerStats:
     jobs: int = 0
@@ -170,6 +221,8 @@ class SchedulerStats:
     nulls: int = 0
     coalesced: int = 0          # keys served by another job's request
     max_inflight: int = 0       # peak concurrently-executing requests
+    packed_requests: int = 0    # merged (co-packed) provider requests
+    packed_batches: int = 0     # tail batches folded into merged requests
 
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
@@ -264,18 +317,30 @@ class RequestScheduler:
     session.  Construct once, pass as ``SemanticContext(scheduler=...)``;
     ``shutdown()`` (or use as a context manager) drains the pool."""
 
-    def __init__(self, max_workers: int = 16):
+    def __init__(self, max_workers: int = 16,
+                 pack_linger_s: float = 0.02):
         self.max_workers = max_workers
+        # how long a part-filled tail batch waits in the packing queue
+        # for a same-prefix partner before dispatching alone
+        self.pack_linger_s = pack_linger_s
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="flockjax-sched")
         self._lock = threading.Lock()
         self._inflight: Dict[str, _InflightEntry] = {}
         self._gates: Dict[str, _ModelGate] = {}
+        self._packs: Dict[tuple, _PendingPack] = {}
+        self._pack_lock = threading.Lock()
         self._executing = 0
         self.stats = SchedulerStats()
 
     # ---- lifecycle ---------------------------------------------------------
     def shutdown(self, wait: bool = True):
+        # flush parked tails first: their jobs' result() calls would
+        # otherwise hang on batches the pool will never run
+        with self._pack_lock:
+            pending = list(self._packs.values())
+        for p in pending:
+            self._flush_pack(p)
         self._pool.shutdown(wait=wait)
 
     def __enter__(self):
@@ -303,8 +368,8 @@ class RequestScheduler:
                batches: Optional[Sequence[List[int]]] = None, cache=None,
                single_flight: bool = True,
                plan: Optional[Callable[[List[int]],
-                                       List[List[int]]]] = None
-               ) -> DispatchJob:
+                                       List[List[int]]]] = None,
+               pack: Optional[dict] = None) -> DispatchJob:
         """Enqueue pre-planned ``batches`` (position lists into ``keys``)
         for concurrent execution.  With ``single_flight``, positions
         whose key is already in flight (submitted by ANOTHER job) are
@@ -323,7 +388,15 @@ class RequestScheduler:
         ``plan`` (owned positions -> batches), when given, re-plans the
         batches AFTER coalescing so the surviving positions pack densely
         — filtering borrowed keys out of pre-planned ``batches`` would
-        leave sparse batches and more requests than the serial path."""
+        leave sparse batches and more requests than the serial path.
+
+        ``pack`` opts the job's part-filled TAIL batch into the cross-job
+        co-packing queue: ``{"key": prefix identity, "rows": per-position
+        provider payloads, "call": rows -> per-row results, "weights":
+        per-position budget weights, "budget": packed-request budget,
+        "max_batch": per-request tuple cap}``.  Tails from different
+        jobs sharing ``(model.ref, key)`` merge into one provider
+        request, demultiplexed back by position."""
         job = DispatchJob(self, keys, run, model, cache)
         self.stats.add(jobs=1)
 
@@ -377,10 +450,17 @@ class RequestScheduler:
             owned_batches = [[p for p in b if p in owned_pos]
                              for b in (batches or [])]
             owned_batches = [b for b in owned_batches if b]
-        if not owned_batches:
+        parked: Optional[List[int]] = None
+        if pack is not None and owned_batches:
+            tail = owned_batches[-1]
+            tail_w = sum(pack["weights"][p] for p in tail)
+            if tail_w <= _PACK_FILL_MAX * pack["budget"]:
+                parked = tail
+                owned_batches = owned_batches[:-1]
+        if not owned_batches and parked is None:
             job._done.set()
             return job
-        job._batch_started(len(owned_batches))
+        job._batch_started(len(owned_batches) + (parked is not None))
         try:
             for b in owned_batches:
                 self._pool.submit(self._run_batch, job, b)
@@ -390,6 +470,8 @@ class RequestScheduler:
             # borrower hangs on them, then the caller sees the error
             job._fail(exc)
             raise
+        if parked is not None:
+            self._register_pack(job, parked, pack)
         return job
 
     def submit_map(self, model: ModelResource, keys: Sequence[str],
@@ -397,43 +479,217 @@ class RequestScheduler:
                    run: Callable[[List[int]], list], cache=None,
                    max_batch: int = 0,
                    context_window: Optional[int] = None,
-                   single_flight: bool = True) -> DispatchJob:
+                   single_flight: bool = True, headroom: float = 1.0,
+                   pack_key=None,
+                   pack_rows: Optional[Sequence] = None,
+                   pack_call: Optional[Callable[[list], list]] = None
+                   ) -> DispatchJob:
         """Dispatch with context-window batch planning that runs AFTER
         single-flight coalescing, so the positions this job actually
-        owns pack as densely as a serial execution would."""
+        owns pack as densely as a serial execution would.
+
+        ``headroom`` (from ``SemanticContext.batch_headroom``) shrinks
+        the planned budget for models with observed overflow retries.
+        ``pack_key``/``pack_rows``/``pack_call`` opt the job's
+        part-filled tail batch into cross-job co-packing: ``pack_key``
+        is the metaprompt-prefix identity shared by co-packable jobs,
+        ``pack_rows[p]`` the provider payload for position ``p``, and
+        ``pack_call(rows)`` one provider request over rows drawn from
+        any number of same-prefix jobs."""
         window = (context_window if context_window is not None
                   else model.context_window)
 
         def plan(owned: List[int]) -> List[List[int]]:
             bp = plan_batches([token_costs[p] for p in owned],
                               prefix_tokens, window,
-                              model.max_output_tokens, max_batch)
+                              model.max_output_tokens, max_batch,
+                              headroom=headroom)
             return [[owned[j] for j in b] for b in bp.batches]
 
+        pack = None
+        if (pack_key is not None and pack_rows is not None
+                and pack_call is not None):
+            budget = int((window - prefix_tokens) * headroom)
+            if budget > 0:
+                pack = {"key": pack_key, "rows": pack_rows,
+                        "call": pack_call, "budget": budget,
+                        "max_batch": max_batch,
+                        "weights": [c + model.max_output_tokens
+                                    for c in token_costs]}
         return self.submit(model, keys, run, cache=cache,
-                           single_flight=single_flight, plan=plan)
+                           single_flight=single_flight, plan=plan,
+                           pack=pack)
+
+    # ---- co-packing stage --------------------------------------------------
+    def _register_pack(self, job: DispatchJob, positions: List[int],
+                       pack: dict):
+        """Park a part-filled tail batch in the per-(model, prefix)
+        packing queue.  Merges into an already-parked compatible entry
+        when the combined batch fits the budget; flushes immediately
+        once the merged batch is dense enough, otherwise the linger
+        timer dispatches whatever accumulated."""
+        seg = _PackSegment(job, positions,
+                           [pack["rows"][p] for p in positions],
+                           sum(pack["weights"][p] for p in positions))
+        key = (job.model.ref, pack["key"])
+        to_flush = None
+        with self._pack_lock:
+            pending = self._packs.get(key)
+            if pending is not None:
+                fits = (pending.tokens + seg.weight
+                        <= min(pending.budget, pack["budget"]))
+                size = pending.size() + len(positions)
+                for cap in (pending.max_batch, pack["max_batch"]):
+                    if cap and size > cap:
+                        fits = False
+                if fits:
+                    pending.segments.append(seg)
+                    pending.tokens += seg.weight
+                    pending.budget = min(pending.budget, pack["budget"])
+                    if pack["max_batch"] and (not pending.max_batch
+                                              or pack["max_batch"]
+                                              < pending.max_batch):
+                        pending.max_batch = pack["max_batch"]
+                    if self._pack_is_full(pending):
+                        to_flush = pending
+                    pending = seg = None
+                else:
+                    to_flush = pending      # full: dispatch, repark fresh
+                    pending = None
+            if seg is not None and pending is None:
+                pending = _PendingPack(key, job.model, pack["budget"],
+                                       pack["max_batch"], pack["call"],
+                                       seg)
+                self._packs[key] = pending
+                pending.timer = threading.Timer(
+                    self.pack_linger_s, self._flush_pack, (pending,))
+                pending.timer.daemon = True
+                pending.timer.start()
+        if to_flush is not None:
+            self._flush_pack(to_flush)
+
+    @staticmethod
+    def _pack_is_full(pending: _PendingPack) -> bool:
+        """A merged batch that cannot usefully grow dispatches now
+        instead of waiting out the linger: token fill near the budget,
+        the per-request tuple cap reached, or no room left for even one
+        more typical tuple."""
+        if pending.tokens >= _PACK_FLUSH_FILL * pending.budget:
+            return True
+        size = pending.size()
+        if pending.max_batch and size >= pending.max_batch:
+            return True
+        mean_weight = pending.tokens / max(size, 1)
+        return pending.budget - pending.tokens < mean_weight
+
+    def _flush_pack(self, pending: _PendingPack):
+        """Dispatch a packing-queue entry: alone it runs as its job's
+        ordinary batch (bit-identical to never having parked); merged it
+        runs as ONE provider request demultiplexed across jobs."""
+        with self._pack_lock:
+            if pending.flushed:
+                return
+            pending.flushed = True
+            if pending.timer is not None:
+                pending.timer.cancel()
+            if self._packs.get(pending.key) is pending:
+                del self._packs[pending.key]
+            segments = pending.segments
+        try:
+            if len(segments) == 1:
+                self._pool.submit(self._run_batch, segments[0].job,
+                                  segments[0].positions)
+            else:
+                self.stats.add(packed_requests=1,
+                               packed_batches=len(segments))
+                self._pool.submit(self._run_pack, pending)
+        except BaseException as exc:    # pool shut down mid-linger
+            for s in segments:
+                s.job._fail(exc)
 
     # ---- worker ------------------------------------------------------------
     def _run_batch(self, job: DispatchJob, batch: List[int]):
-        """Pool-thread entry: admit the batch through its model gate (or
+        self._run_gated(job.model, ("batch", job, batch))
+
+    def _run_pack(self, pending: _PendingPack):
+        self._run_gated(pending.model, ("pack", pending))
+
+    def _run_gated(self, model: ModelResource, task: tuple):
+        """Pool-thread entry: admit the task through its model gate (or
         park it — pool threads never block on a busy model, so one
         low-concurrency model cannot starve other models' jobs), then
         run it and keep draining parked same-model work inline (the slot
         hands off without a pool round-trip)."""
-        gate = self._model_gate(job.model)
-        if not gate.try_acquire((job, batch)):
+        gate = self._model_gate(model)
+        if not gate.try_acquire(task):
             return          # parked on the gate; drained on release
-        task = (job, batch)
         while task is not None:
-            j, b = task
             # any escape — provider errors, cache-put I/O failures,
-            # requeue after shutdown — fails the job, never strands
-            # result()
+            # requeue after shutdown — fails the owning job(s), never
+            # strands result()
             try:
-                self._execute_admitted(j, b)
+                if task[0] == "batch":
+                    self._execute_admitted(task[1], task[2])
+                else:
+                    self._execute_pack(task[1])
             except BaseException as exc:     # surfaced at result()
-                j._fail(exc)
+                if task[0] == "batch":
+                    task[1]._fail(exc)
+                else:
+                    for s in task[1].segments:
+                        s.job._fail(exc)
             task = gate.release_and_next()
+
+    def _execute_pack(self, pending: _PendingPack):
+        """Run one merged co-packed request and demultiplex the per-row
+        results back to each owning job by position.  The provider
+        request is attributed to the FIRST segment's job (requests,
+        batch size, latency); riders count it under ``stats.packed`` —
+        summed across jobs the accounting matches the provider exactly.
+        On overflow the merge is undone: each tail requeues as its own
+        ordinary batch and the per-job adaptive protocol takes over."""
+        segs = []
+        for s in pending.segments:
+            with s.job._lock:
+                dead = s.job._error is not None
+            if not dead:
+                segs.append(s)
+        if not segs:
+            return
+        with self._lock:
+            self._executing += 1
+            if self._executing > self.stats.max_inflight:
+                self.stats.max_inflight = self._executing
+        rows = [r for s in segs for r in s.rows]
+        t0 = time.monotonic()
+        try:
+            out = pending.call(rows)
+        except ContextOverflowError:
+            with segs[0].job._lock:
+                segs[0].job.stats.retries += 1
+            self.stats.add(retries=1)
+            for s in segs:
+                self._pool.submit(self._run_batch, s.job, s.positions)
+            return
+        finally:
+            with self._lock:
+                self._executing -= 1
+        dt = time.monotonic() - t0
+        off = 0
+        for k, s in enumerate(segs):
+            vals = out[off:off + len(s.positions)]
+            off += len(s.positions)
+            with s.job._lock:
+                if k == 0:
+                    s.job.stats.requests += 1
+                    s.job.stats.batch_sizes.append(len(rows))
+                    s.job.stats.latencies.append(dt)
+                else:
+                    s.job.stats.packed += 1
+            for pos, val in zip(s.positions, vals):
+                self._resolve(s.job, pos, val)
+            s.job._batch_finished()
+        self.stats.add(requests=1)
 
     def _execute_admitted(self, job: DispatchJob, batch: List[int]):
         with job._lock:

@@ -1,4 +1,4 @@
 from .table import Table
-from .pipeline import Pipeline, PlanNode, ask
+from .pipeline import Pipeline, PlanNode, ask, copack_identity
 from .optimizer import (OptimizedPlan, PlanCost, estimate_plan_cost,
                         optimize_plan)

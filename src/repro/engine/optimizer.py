@@ -114,13 +114,24 @@ class PlanCost:
     ``wasted_requests`` is the expected speculative-dispatch waste: the
     requests a chosen ``llm_spec_chain`` issues over tuples a serial
     chain would have eliminated, predicted from recorded selectivity
-    (0 for plans without chosen speculation)."""
+    (0 for plans without chosen speculation).
+
+    ``packed_requests`` is the request estimate WITH cross-node batch
+    co-packing: same-prefix map nodes of one dispatch group merge their
+    part-filled tail batches, so the packed estimate plans their tuples
+    as one stream (0 when no dispatch group co-packs — the plain
+    ``requests`` estimate stands).
+
+    ``tokens`` counts estimated PROMPT tokens (tuple payloads + one
+    prefix per request); expected output tokens shape the batch plans
+    but are not part of the token totals."""
     requests: int = 0
     tokens: int = 0
     rows_into_llm: int = 0      # tuples fed to semantic ops, post-dedup-free
     waves: int = 0              # critical-path request waves (concurrent)
     wall_s: float = 0.0         # calibrated latency estimate (0 = no data)
     wasted_requests: int = 0    # expected speculative-request overshoot
+    packed_requests: int = 0    # request estimate with tail co-packing
 
     def __str__(self):
         s = (f"requests={self.requests} tokens={self.tokens} "
@@ -129,6 +140,8 @@ class PlanCost:
             s += f" est_wall={self.wall_s:.3f}s"
         if self.wasted_requests:
             s += f" wasted_requests={self.wasted_requests}"
+        if self.packed_requests and self.packed_requests != self.requests:
+            s += f" packed_req={self.packed_requests}"
         return s
 
 
@@ -268,7 +281,8 @@ def _filter_estimate(ctx: SemanticContext, member: dict, n: int,
         build_prefix("filter", prompt_text, ctx.serialization))
     plan = plan_batches([per_tuple] * n, prefix_tokens,
                         model.context_window, model.max_output_tokens,
-                        ctx.max_batch if ctx.enable_batching else 1)
+                        ctx.max_batch if ctx.enable_batching else 1,
+                        headroom=ctx.batch_headroom(model.ref))
     sampled = any(c in source.columns for c in member.get("cols", ()))
     requests = _calibrated_requests(ctx, model, n, len(plan.batches),
                                     sampled)
@@ -367,7 +381,8 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
         build_prefix(kind, prompt_text, ctx.serialization))
     plan = plan_batches([per_tuple] * n, prefix_tokens,
                         model.context_window, model.max_output_tokens,
-                        ctx.max_batch if ctx.enable_batching else 1)
+                        ctx.max_batch if ctx.enable_batching else 1,
+                        headroom=ctx.batch_headroom(model.ref))
     sampled = any(c in source.columns for c in info.get("cols", ()))
     cost.requests = _calibrated_requests(ctx, model, n, len(plan.batches),
                                          sampled)
@@ -388,6 +403,50 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
     return rows, cost
 
 
+def _packed_savings(ctx: SemanticContext, source: Table, group,
+                    n: int) -> int:
+    """Requests saved by co-packing one dispatch group: members sharing
+    a metaprompt-prefix identity plan their tuples as ONE stream, so the
+    part-filled tails that would ship per node merge (mirrors the
+    scheduler's packing queue)."""
+    from .pipeline import copack_identity   # local import: avoid cycle
+
+    if n <= 0:
+        return 0
+    by_ident: dict = {}
+    for node in group:
+        ident = copack_identity(ctx, node)
+        if ident is not None:
+            by_ident.setdefault(ident, []).append(node)
+    saved = 0
+    mb = ctx.max_batch if ctx.enable_batching else 1
+    for ident, members in by_ident.items():
+        if len(members) < 2:
+            continue
+        model = ctx.resolve_model(members[0].info["model"])
+        kind = ident[2]         # (provider, model.ref, kind, ser, text)
+        prompt_text, _ = _node_prompt_text(ctx, members[0])
+        prefix_tokens = estimate_tokens(
+            build_prefix(kind, prompt_text, ctx.serialization))
+        headroom = ctx.batch_headroom(model.ref)
+        costs: List[int] = []
+        solo = 0
+        for node in members:
+            per_tuple = _avg_tuple_tokens(source, node.info.get("cols",
+                                                                ()),
+                                          ctx.serialization)
+            member_costs = [per_tuple] * n
+            solo += len(plan_batches(
+                member_costs, prefix_tokens, model.context_window,
+                model.max_output_tokens, mb, headroom=headroom).batches)
+            costs.extend(member_costs)
+        joint = len(plan_batches(
+            costs, prefix_tokens, model.context_window,
+            model.max_output_tokens, mb, headroom=headroom).batches)
+        saved += max(0, solo - joint)
+    return saved
+
+
 def estimate_plan_cost(ctx: SemanticContext, source: Table,
                        nodes: Sequence) -> Tuple[PlanCost, List[dict]]:
     from .pipeline import Pipeline      # local import: avoid cycle
@@ -396,8 +455,10 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
     per_node: List[dict] = []
     node_info: dict = {}      # id(node) -> (model_ref, limit, requests,
     #                            standalone waves, standalone wall)
+    entry_rows: dict = {}     # id(node) -> rows flowing INTO the node
     rows = float(len(source))
     for node in nodes:
+        entry_rows[id(node)] = rows
         rows, c = estimate_node_cost(ctx, node, rows, source)
         per_node.append({"rows": int(round(rows)),
                          "requests": c.requests, "tokens": c.tokens})
@@ -418,7 +479,14 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
     # p50 request latency; a plan touching any uncalibrated model
     # reports wall_s = 0.0 (unknown) rather than an undercount.
     uncalibrated = False
+    copack_on = (getattr(ctx, "copack", False)
+                 and ctx.scheduler is not None and ctx.enable_batching)
+    packed_saved = 0
     for group in Pipeline._dispatch_groups(list(nodes)):
+        if copack_on and len(group) > 1:
+            packed_saved += _packed_savings(
+                ctx, source, group,
+                int(round(entry_rows.get(id(group[0]), 0.0))))
         if len(group) == 1:
             ref, limit, reqs, w, nwall = node_info.get(
                 id(group[0]), ("", 1, 0, 0, 0.0))
@@ -451,6 +519,8 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
             total.wall_s += group_wall
     if uncalibrated:
         total.wall_s = 0.0
+    if packed_saved:
+        total.packed_requests = max(0, total.requests - packed_saved)
     return total, per_node
 
 

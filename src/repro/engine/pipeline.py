@@ -35,6 +35,16 @@ the model's ``max_concurrency`` instead of the batch count.  Dispatch
 never changes which tuples a node sees — results and request/token
 counts are identical to the serial path.
 
+**Cross-node batch co-packing** (``SemanticContext(copack=...)``,
+default on): map nodes of one concurrent dispatch group that share a
+metaprompt-prefix identity (model + function kind + serialization +
+prompt text — ``copack_identity``) register with the scheduler's
+packing queue, and their part-filled TAIL batches merge into shared
+provider requests before admission.  Per-row results are independent of
+batch composition, so collected tables are bit-identical; only request
+density changes (fewer, fuller batches — the TPU step stays dense when
+concurrency is highest).  ``copack=False`` is the escape hatch.
+
 **Speculative filter chains** (``collect(speculate=...)`` or the
 context's ``speculate`` knob): a chain of k ``llm_filter`` nodes
 normally costs k sequential provider round-trips, because each member
@@ -74,6 +84,33 @@ from .table import Table
 # def-use dependency links them (each sees the group's input table either
 # way, so results AND request/token counts match the serial execution)
 _PARALLEL_MAP_OPS = ("llm_complete", "llm_complete_json", "llm_embedding")
+
+# plan ops whose dispatches can co-pack: their metaprompt prefix is fully
+# determined by (model, function kind, serialization, prompt text), so
+# two nodes agreeing on that tuple produce byte-identical static prefixes
+# and their rows can share one provider request
+_COPACK_KINDS = {"llm_complete": "complete",
+                 "llm_complete_json": "complete_json"}
+
+
+def copack_identity(ctx: SemanticContext, node: "PlanNode"):
+    """Metaprompt-prefix identity of a map node, or ``None`` when the
+    node cannot co-pack.  Must mirror the ``pack_key`` computed by
+    ``functions._map_core`` — the scheduler's packing queue merges tail
+    batches exactly when these tuples compare equal."""
+    kind = _COPACK_KINDS.get(node.op)
+    if kind is None:
+        return None
+    try:
+        model = ctx.resolve_model(node.info["model"])
+        text, _ = ctx.resolve_prompt(node.info["prompt"])
+    except KeyError:
+        return None
+    # the FULL resolved resource, not just name@version: inline specs
+    # all land on version 0, and a merged request executes under one
+    # job's model object — jobs whose caps (max_output_tokens,
+    # context_window) differ must never merge
+    return (id(ctx.provider), model, kind, ctx.serialization, text)
 
 
 @dataclass
@@ -227,9 +264,23 @@ class Pipeline:
             i = j
         return groups
 
+    def _copack_group_ids(self, group: List[PlanNode]) -> List:
+        """Prefix identities shared by >= 2 nodes of one dispatch group —
+        the co-packable set this group activates on the context while it
+        runs (a lone node never pays the packing-queue linger)."""
+        counts: dict = {}
+        for node in group:
+            ident = copack_identity(self.ctx, node)
+            if ident is not None:
+                counts[ident] = counts.get(ident, 0) + 1
+        return [i for i, n in counts.items() if n >= 2]
+
     def _run_group(self, t_in: Table, group: List[PlanNode]) -> Table:
         """Execute a group of independent map nodes concurrently over one
-        input table, then merge their output columns in plan order."""
+        input table, then merge their output columns in plan order.
+        Nodes sharing a metaprompt-prefix identity are registered as
+        co-packable for the duration, so their part-filled tail batches
+        can merge into shared provider requests."""
         results: List = [None] * len(group)
         errors: List[BaseException] = []
 
@@ -240,13 +291,22 @@ class Pipeline:
             except BaseException as exc:       # re-raised on the caller
                 errors.append(exc)
 
-        threads = [threading.Thread(target=worker, args=(k, n),
-                                    name=f"flockjax-node-{n.op}")
-                   for k, n in enumerate(group)]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
+        shared = (self._copack_group_ids(group)
+                  if self.ctx.copack and self.ctx.scheduler is not None
+                  else [])
+        if shared:
+            self.ctx.copack_begin(shared)
+        try:
+            threads = [threading.Thread(target=worker, args=(k, n),
+                                        name=f"flockjax-node-{n.op}")
+                       for k, n in enumerate(group)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+        finally:
+            if shared:
+                self.ctx.copack_end(shared)
         if errors:
             raise errors[0]
 
@@ -333,12 +393,14 @@ class Pipeline:
                else f" selectivity={r.selectivity:.2f}")
         coal = ("" if not r.coalesced
                 else f" coalesced={r.coalesced}")
+        packed = ("" if not r.packed
+                  else f" packed={r.packed}")
         lines.append(
             f"{indent}tuples={r.n_tuples} unique={r.n_unique} "
             f"cache_hits={r.cache_hits} requests={r.requests} "
             f"retries={r.retries} nulls={r.nulls} "
             f"batch_sizes={r.batch_sizes[:8]} "
-            f"serialization={r.serialization}{sel}{coal}")
+            f"serialization={r.serialization}{sel}{coal}{packed}")
 
     def _render_nodes(self, lines, nodes, node_costs):
         for i, node in enumerate(nodes):

@@ -1,0 +1,491 @@
+"""Cross-node batch co-packing + calibration-aware headroom tests, plus
+regression tests for the three PR bugfixes:
+
+  * ``plan_batches.est_tokens`` counted expected OUTPUT tokens although
+    it is documented/consumed as estimated prompt tokens per request;
+  * sidecar stores staged atomic replaces through
+    ``path.with_suffix(".tmp")``, which mangles multi-dot paths and can
+    collide across sidecars sharing a prefix;
+  * selectivity observations were averaged forever, so a shifted data
+    distribution never re-learned.
+"""
+
+import json
+import time
+
+import pytest
+
+from repro.core import (MockProvider, PredictionCache, RequestScheduler,
+                        SelectivityStore, SemanticContext,
+                        headroom_factor, llm_complete,
+                        reset_global_catalog)
+from repro.core.batching import ContextOverflowError, plan_batches
+from repro.core.cache import (CalibrationStore, HEADROOM_MIN,
+                              HEADROOM_MIN_OBS, SELECTIVITY_WINDOW,
+                              bound_observations)
+from repro.core.resources import ModelResource
+from repro.engine import Pipeline, Table, copack_identity
+
+
+def _resource(**kw) -> ModelResource:
+    base = dict(name="m", version=1, arch="mock", context_window=4096,
+                max_output_tokens=8, max_concurrency=4)
+    base.update(kw)
+    return ModelResource(**base)
+
+
+# ---------------------------------------------------------------------------
+# bugfix: est_tokens must be PROMPT tokens (no expected-output padding)
+# ---------------------------------------------------------------------------
+def test_plan_batches_est_tokens_exclude_output_tokens():
+    plan = plan_batches([10, 10, 10], prefix_tokens=0,
+                        context_window=10_000, max_output_tokens=100)
+    assert plan.batches == [[0, 1, 2]]
+    assert plan.est_tokens == [30]      # was 330 with the output bug
+
+
+def test_plan_batches_output_tokens_still_shape_the_budget():
+    # per tuple: 10 prompt + 50 output = 60 budget weight; window 121
+    # fits two tuples (120), not three — output tokens still gate
+    # admission even though they are excluded from est_tokens
+    plan = plan_batches([10, 10, 10], prefix_tokens=0, context_window=121,
+                        max_output_tokens=50)
+    assert plan.batches == [[0, 1], [2]]
+    assert plan.est_tokens == [20, 10]
+
+
+def test_plan_batches_headroom_shrinks_budget():
+    costs = [10] * 12                   # weight 12/tuple with output 2
+    full = plan_batches(costs, prefix_tokens=0, context_window=144,
+                        max_output_tokens=2)
+    half = plan_batches(costs, prefix_tokens=0, context_window=144,
+                        max_output_tokens=2, headroom=0.5)
+    assert len(full.batches) == 1
+    assert len(half.batches) == 2
+    assert max(len(b) for b in half.batches) \
+        < max(len(b) for b in full.batches)
+
+
+# ---------------------------------------------------------------------------
+# bugfix: sidecar temp files derive from the FULL filename
+# ---------------------------------------------------------------------------
+def test_sidecar_save_does_not_clobber_sibling_tmp(tmp_path):
+    # with_suffix(".tmp") on "x.sel" staged through "x.tmp" — destroying
+    # any sibling file of that name (e.g. another sidecar's staging)
+    sentinel = tmp_path / "x.tmp"
+    sentinel.write_text("do not touch")
+    store = SelectivityStore(str(tmp_path / "x.sel"))
+    store.save({"p@1": [1, 2]})
+    assert sentinel.read_text() == "do not touch"
+    assert store.load() == {"p@1": [1, 2]}
+
+    cal = CalibrationStore(str(tmp_path / "x.cal"))
+    cal.save({"m@1": {"requests": 1, "retries": 0, "tuples": 2,
+                      "latency_s": [0.1]}})
+    assert sentinel.read_text() == "do not touch"
+    assert cal.load()["m@1"]["requests"] == 1
+
+
+def test_multidot_sidecar_paths_roundtrip(tmp_path):
+    # the default sidecar naming: <cache>.jsonl.selectivity.json
+    store = SelectivityStore(str(tmp_path / "cache.jsonl.selectivity.json"))
+    store.save({"p@1": [3, 10]})
+    assert store.load() == {"p@1": [3, 10]}
+    assert not (tmp_path / "cache.jsonl.selectivity.tmp").exists()
+    assert not (tmp_path / "cache.tmp").exists()
+
+
+def test_prediction_cache_compact_uses_fullname_tmp(tmp_path):
+    sentinel = tmp_path / "cache.tmp"
+    sentinel.write_text("unrelated")
+    cache = PredictionCache(persist_path=str(tmp_path / "cache.jsonl"))
+    cache.put("k", "v")
+    cache.compact()
+    assert sentinel.read_text() == "unrelated"
+    assert PredictionCache(
+        persist_path=str(tmp_path / "cache.jsonl")).get("k") == (True, "v")
+
+
+# ---------------------------------------------------------------------------
+# bugfix: selectivity drift — bounded observation window re-learns
+# ---------------------------------------------------------------------------
+def test_bound_observations_caps_total():
+    assert bound_observations(10, 100) == (10, 100)
+    p, t = bound_observations(9000, 10_000)
+    assert t == SELECTIVITY_WINDOW
+    assert p == round(9000 * SELECTIVITY_WINDOW / 10_000)
+
+
+def test_selectivity_relearns_after_distribution_shift():
+    ctx = SemanticContext(provider=MockProvider())
+    # long history at 90% pass rate, then the data shifts to 10%
+    ctx.record_selectivity("p@1", 900, 1000)
+    for _ in range(30):
+        ctx.record_selectivity("p@1", 10, 100)
+    est = ctx.expected_selectivity("p@1")
+    # forever-averaging would still report (900+300)/4000 = 0.30
+    assert est < 0.2, f"windowed estimate did not re-learn: {est}"
+    passed, total = ctx.selectivity_stats["p@1"]
+    assert total <= SELECTIVITY_WINDOW
+
+
+def test_selectivity_store_bounds_legacy_oversized_entries(tmp_path):
+    path = tmp_path / "s.json"
+    path.write_text(json.dumps(
+        {"stats": {"p@1": [90_000, 100_000]}}))
+    loaded = SelectivityStore(str(path)).load()
+    assert loaded["p@1"][1] == SELECTIVITY_WINDOW
+    assert abs(loaded["p@1"][0] / loaded["p@1"][1] - 0.9) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# calibration-aware headroom
+# ---------------------------------------------------------------------------
+def test_headroom_factor_thresholds():
+    assert headroom_factor(0, 0) == 1.0
+    assert headroom_factor(HEADROOM_MIN_OBS, 0) == 1.0
+    # below the observation threshold the rate is not trusted
+    assert headroom_factor(2, 1) == 1.0
+    assert headroom_factor(8, 2) == pytest.approx(0.8)
+    # floored: a catastrophically overflowing model still plans half
+    assert headroom_factor(1, 100) == HEADROOM_MIN
+
+
+def test_headroom_read_path_from_calibration_sidecar(tmp_path):
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    # a prior session recorded a 25% overflow-retry rate for m@0
+    CalibrationStore(cache_path + ".calibration.json").save(
+        {"m@0": {"requests": 30, "retries": 10, "tuples": 300,
+                 "latency_s": [0.01]}})
+    ctx = SemanticContext(
+        cache=PredictionCache(persist_path=cache_path),
+        provider=MockProvider())
+    assert ctx.batch_headroom("m@0") == pytest.approx(0.75)
+    assert ctx.batch_headroom("unknown@9") == 1.0
+
+    rows = [{"t": f"row number {i} with some body text"}
+            for i in range(40)]
+    model = {"model": "m", "context_window": 700, "max_output_tokens": 8}
+    ctrl = SemanticContext(provider=MockProvider())
+    llm_complete(ctrl, model, {"prompt": "p"}, rows)
+    llm_complete(ctx, model, {"prompt": "p"}, rows)
+    # headroom plans strictly smaller batches up front
+    assert max(ctx.last_report().batch_sizes) \
+        < max(ctrl.last_report().batch_sizes)
+
+
+def test_headroom_avoids_overflow_retries_across_sessions(tmp_path):
+    """The feedback loop end-to-end: session 1 overflows (token
+    estimates undercount serialization framing on a tight window) and
+    records retries; session 2 loads the sidecar, plans with headroom,
+    and pays strictly fewer split-and-requeue retries."""
+    reset_global_catalog()
+    cache_path = str(tmp_path / "cache.jsonl")
+    model = {"model": "tight", "context_window": 260,
+             "max_output_tokens": 2}
+
+    def run(tag):
+        ctx = SemanticContext(
+            cache=PredictionCache(persist_path=cache_path),
+            provider=MockProvider(), enable_dedup=False)
+        rows = [{"t": f"{tag} row {i} and padding padding {i}"}
+                for i in range(48)]
+        with ctx:
+            llm_complete(ctx, model, {"prompt": "p"}, rows)
+        rep = ctx.last_report()
+        assert all(v is not None for v in rep.batch_sizes)
+        return rep
+
+    first = run("alpha")
+    assert first.retries > 0, \
+        "seed workload must overflow for the feedback test to bite"
+    second = run("beta")
+    assert second.retries < first.retries
+
+
+def test_calibration_counters_bounded():
+    ctx = SemanticContext(provider=MockProvider())
+    for _ in range(40):
+        ctx.record_calibration("m@1", requests=200, retries=10,
+                               tuples=2000, latencies=[0.01])
+    rec = ctx.calibration_stats["m@1"]
+    from repro.core.cache import CALIBRATION_COUNT_WINDOW
+    assert rec["requests"] + rec["retries"] <= CALIBRATION_COUNT_WINDOW + 1
+    # the rate survives the rescale
+    assert rec["retries"] / (rec["requests"] + rec["retries"]) \
+        == pytest.approx(10 / 210, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# co-packing: scheduler-level equivalence
+# ---------------------------------------------------------------------------
+def _submit_packed_pair(sched, calls, fail_merged_over=None):
+    """Two jobs sharing a pack identity, each with one part-filled tail
+    batch.  Returns (job_a, job_b, rows_a, rows_b)."""
+    model = _resource(context_window=1000)
+    rows_a = [f"a{i}" for i in range(4)]
+    rows_b = [f"b{i}" for i in range(4)]
+
+    def pack_call(rows):
+        if fail_merged_over is not None and len(rows) > fail_merged_over:
+            raise ContextOverflowError("merged too large")
+        calls.append(list(rows))
+        return [f"r:{r}" for r in rows]
+
+    def make_run(rows):
+        def run(positions):
+            return pack_call([rows[p] for p in positions])
+        return run
+
+    jobs = []
+    for rows, tag in ((rows_a, "a"), (rows_b, "b")):
+        jobs.append(sched.submit_map(
+            model, [f"key-{r}" for r in rows], [20] * len(rows),
+            prefix_tokens=100, run=make_run(rows), single_flight=False,
+            pack_key="shared-prefix", pack_rows=rows,
+            pack_call=pack_call))
+    return jobs[0], jobs[1], rows_a, rows_b
+
+
+def test_copack_merges_tails_into_one_request():
+    calls = []
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        ja, jb, rows_a, rows_b = _submit_packed_pair(sched, calls)
+        va, sa = ja.result(timeout=10)
+        vb, sb = jb.result(timeout=10)
+    assert va == [f"r:{r}" for r in rows_a]
+    assert vb == [f"r:{r}" for r in rows_b]
+    assert len(calls) == 1, "tails must merge into ONE provider request"
+    assert sorted(calls[0]) == sorted(rows_a + rows_b)
+    assert sched.stats.packed_requests == 1
+    assert sched.stats.packed_batches == 2
+    # the request is attributed once; the rider counts it as packed
+    assert sa.requests + sb.requests == 1
+    assert sa.packed + sb.packed == 1
+
+
+def test_copack_lone_tail_flushes_after_linger():
+    calls = []
+    model = _resource()
+
+    def pack_call(rows):
+        calls.append(list(rows))
+        return [f"r:{r}" for r in rows]
+
+    rows = ["x0", "x1"]
+    with RequestScheduler(pack_linger_s=0.05) as sched:
+        job = sched.submit_map(
+            model, ["k0", "k1"], [10, 10], prefix_tokens=10,
+            run=lambda ps: pack_call([rows[p] for p in ps]),
+            single_flight=False, pack_key="p", pack_rows=rows,
+            pack_call=pack_call)
+        vals, stats = job.result(timeout=10)
+    assert vals == ["r:x0", "r:x1"]
+    assert len(calls) == 1
+    assert sched.stats.packed_requests == 0
+
+
+def test_copack_merged_overflow_unmerges():
+    calls = []
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        ja, jb, rows_a, rows_b = _submit_packed_pair(
+            sched, calls, fail_merged_over=6)
+        va, sa = ja.result(timeout=10)
+        vb, sb = jb.result(timeout=10)
+    assert va == [f"r:{r}" for r in rows_a]
+    assert vb == [f"r:{r}" for r in rows_b]
+    # merged attempt overflowed -> un-merged into per-job batches
+    assert sorted(map(sorted, calls)) \
+        == sorted(map(sorted, [rows_a, rows_b]))
+    assert sa.retries + sb.retries == 1
+    assert sa.requests == sb.requests == 1
+
+
+def test_copack_full_tail_not_parked():
+    # a tail above the fill threshold dispatches immediately: packing
+    # only pays when there is real headroom to merge into
+    calls = []
+    model = _resource(context_window=210)
+    rows = [f"x{i}" for i in range(4)]
+
+    def pack_call(batch):
+        calls.append(list(batch))
+        return [f"r:{r}" for r in batch]
+
+    t0 = time.monotonic()
+    with RequestScheduler(pack_linger_s=5.0) as sched:
+        job = sched.submit_map(
+            model, [f"k{i}" for i in range(4)], [40] * 4,
+            prefix_tokens=10, run=lambda ps: pack_call([rows[p]
+                                                        for p in ps]),
+            single_flight=False, pack_key="p", pack_rows=rows,
+            pack_call=pack_call)
+        vals, _ = job.result(timeout=10)
+    assert vals == [f"r:{r}" for r in rows]
+    assert time.monotonic() - t0 < 4.0, \
+        "a near-full tail must not wait out the packing linger"
+
+
+# ---------------------------------------------------------------------------
+# co-packing: pipeline-level equivalence + determinism
+# ---------------------------------------------------------------------------
+def _copack_table(n=22):
+    return Table({
+        "a": [f"first column text number {i} with body" for i in range(n)],
+        "b": [f"second column text number {i} with body"
+              for i in range(n)],
+    })
+
+
+_COPACK_MODEL = {"model": "cp", "context_window": 100_000,
+                 "max_output_tokens": 8, "max_concurrency": 8}
+# max_batch 16 over 22 rows -> each node plans [16, 6]: a full batch
+# plus a part-filled tail; the two 6-row tails co-pack into one request
+_COPACK_MAX_BATCH = 16
+
+
+def _copack_ctx(**kw):
+    return SemanticContext(provider=MockProvider(),
+                           max_batch=_COPACK_MAX_BATCH, **kw)
+
+
+def _copack_pipe(ctx, table):
+    # two map nodes, SAME model + prompt + kind (shared metaprompt
+    # prefix) over DIFFERENT columns (disjoint cache keys)
+    return (Pipeline(ctx, table, "docs")
+            .llm_complete("s1", _COPACK_MODEL, {"prompt": "summarize"},
+                          ["a"])
+            .llm_complete("s2", _COPACK_MODEL, {"prompt": "summarize"},
+                          ["b"]))
+
+
+def test_copack_identity_mirrors_map_core():
+    ctx = SemanticContext(provider=MockProvider())
+    pipe = _copack_pipe(ctx, _copack_table())
+    ids = [copack_identity(ctx, n) for n in pipe.nodes]
+    assert ids[0] is None                       # scan
+    assert ids[1] == ids[2] != None             # noqa: E711 shared prefix
+    assert ids[1][2] == "complete"
+    other = Pipeline(ctx, _copack_table(), "d").llm_complete(
+        "s3", _COPACK_MODEL, {"prompt": "different"}, ["a"])
+    assert copack_identity(ctx, other.nodes[-1]) != ids[1]
+
+
+def test_copack_pipeline_fewer_requests_same_rows():
+    reset_global_catalog()
+    table = _copack_table()
+    ctx_serial = _copack_ctx()
+    rows_serial = _copack_pipe(ctx_serial, table) \
+        .collect(optimize=False).rows()
+
+    results = {}
+    for copack in (False, True):
+        with RequestScheduler(pack_linger_s=0.5) as sched:
+            ctx = _copack_ctx(scheduler=sched, copack=copack)
+            rows = _copack_pipe(ctx, table).collect(optimize=False).rows()
+            results[copack] = (rows, ctx.provider.stats.calls,
+                               sched.stats.packed_requests,
+                               sum(r.packed for r in ctx.reports))
+    rows_off, calls_off, packed_off, rep_packed_off = results[False]
+    rows_on, calls_on, packed_on, rep_packed_on = results[True]
+    assert rows_off == rows_serial == rows_on, \
+        "co-packing must be bit-identical to unpacked execution"
+    assert calls_off == ctx_serial.provider.stats.calls
+    assert calls_on < calls_off, \
+        "co-packing must issue strictly fewer provider requests"
+    assert packed_off == 0 and packed_on >= 1
+    assert rep_packed_off == 0 and rep_packed_on >= 1
+
+
+@pytest.mark.slow
+def test_copack_deterministic_under_concurrency():
+    reset_global_catalog()
+    table = _copack_table()
+    ctx_serial = _copack_ctx()
+    expect = _copack_pipe(ctx_serial, table).collect(optimize=False).rows()
+    for _ in range(5):
+        with RequestScheduler(pack_linger_s=0.5) as sched:
+            ctx = _copack_ctx(scheduler=sched)
+            rows = _copack_pipe(ctx, table).collect(optimize=False).rows()
+        assert rows == expect
+
+
+def test_copack_escape_hatch_matches_serial_counts():
+    reset_global_catalog()
+    table = _copack_table()
+    ctx_serial = _copack_ctx()
+    _copack_pipe(ctx_serial, table).collect(optimize=False)
+    with RequestScheduler() as sched:
+        ctx = _copack_ctx(scheduler=sched, copack=False)
+        _copack_pipe(ctx, table).collect(optimize=False)
+    assert ctx.provider.stats.calls == ctx_serial.provider.stats.calls
+
+
+def test_explain_reports_packed_request_estimate():
+    reset_global_catalog()
+    with RequestScheduler() as sched:
+        ctx = _copack_ctx(scheduler=sched)
+        pipe = _copack_pipe(ctx, _copack_table())
+        text = pipe.explain()
+        plan = pipe._plan()
+    assert plan.optimized_cost.packed_requests > 0
+    assert plan.optimized_cost.packed_requests \
+        < plan.optimized_cost.requests
+    assert "packed_req=" in text
+
+
+def test_copack_same_name_different_caps_do_not_merge():
+    # inline specs sharing a name all resolve to version 0; the identity
+    # must still distinguish them — a merged request executes under ONE
+    # job's model object, so differing output caps would truncate the
+    # rider's rows
+    ctx = SemanticContext(provider=MockProvider())
+    small = dict(_COPACK_MODEL, max_output_tokens=8)
+    big = dict(_COPACK_MODEL, max_output_tokens=256)
+    pipe = (Pipeline(ctx, _copack_table(), "docs")
+            .llm_complete("s1", small, {"prompt": "summarize"}, ["a"])
+            .llm_complete("s2", big, {"prompt": "summarize"}, ["b"]))
+    ids = [copack_identity(ctx, n) for n in pipe.nodes[1:]]
+    assert None not in ids
+    assert ids[0] != ids[1]
+
+    reset_global_catalog()
+    table = _copack_table()
+
+    def build(c):
+        return (Pipeline(c, table, "docs")
+                .llm_complete("s1", small, {"prompt": "summarize"}, ["a"])
+                .llm_complete("s2", big, {"prompt": "summarize"}, ["b"]))
+
+    ctx_serial = _copack_ctx()
+    rows_serial = build(ctx_serial).collect(optimize=False).rows()
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        ctx = _copack_ctx(scheduler=sched)
+        rows = build(ctx).collect(optimize=False).rows()
+        assert sched.stats.packed_requests == 0
+    assert rows == rows_serial
+    assert ctx.provider.stats.calls == ctx_serial.provider.stats.calls
+
+
+def test_copack_concurrent_distinct_prefixes_do_not_merge():
+    # different prompts -> different prefix identities -> no merging,
+    # and request counts match the serial path exactly
+    reset_global_catalog()
+    table = _copack_table()
+
+    def build(ctx):
+        return (Pipeline(ctx, table, "docs")
+                .llm_complete("s1", _COPACK_MODEL, {"prompt": "one"},
+                              ["a"])
+                .llm_complete("s2", _COPACK_MODEL, {"prompt": "two"},
+                              ["b"]))
+
+    ctx_serial = _copack_ctx()
+    rows_serial = build(ctx_serial).collect(optimize=False).rows()
+    with RequestScheduler() as sched:
+        ctx = _copack_ctx(scheduler=sched)
+        rows = build(ctx).collect(optimize=False).rows()
+        assert sched.stats.packed_requests == 0
+    assert rows == rows_serial
+    assert ctx.provider.stats.calls == ctx_serial.provider.stats.calls
