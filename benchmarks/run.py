@@ -22,6 +22,10 @@ reproduced here:
     fill strictly higher / requests strictly lower, bit-identical rows;
     plus the calibration-aware headroom loop: observed overflow retries
     shrink the next session's planned batches; emits BENCH_copack.json)
+  * first-class retrieval operators -> bench_rag (two-query hybrid
+    plan: fewer embed requests from co-packing + IndexStore reuse,
+    rows bit-identical to the imperative composition, retrieval cost
+    in explain(); emits BENCH_rag.json)
   * Query 3 hybrid search -> bench_hybrid_search
   * serving engine -> bench_continuous_batching
   * kernels -> bench_kernel_* (interpret-mode correctness-path timing; the
@@ -508,6 +512,163 @@ def bench_copack():
     return off["requests"] / on["requests"]
 
 
+def bench_rag():
+    """First-class retrieval operators (paper Query 3 as a PLAN): a
+    two-query hybrid workload — ``hybrid_topk`` -> ``llm_rerank`` per
+    query over one corpus — run two ways:
+
+      * OFF: per-query isolated session, no co-packing, no index store
+        (the imperative pre-PR posture: every query re-embeds the
+        corpus, corpus and query embeds ship separately);
+      * ON: one session with the concurrent scheduler, embed co-packing
+        and the ``IndexStore`` sidecar (query 1 builds the index and
+        merges its corpus tail batch with the query embed; query 2
+        reuses the index and embeds only the query).
+
+    Asserts:
+
+      * retrieved+reranked rows are bit-identical ON vs OFF and vs the
+        imperative BM25Index/VectorIndex/fusion/llm_rerank composition,
+      * provider embed requests are strictly FEWER with co-packing +
+        index reuse ON,
+      * ``explain()`` reports the retrieval cost: per-node embed request
+        estimate (``req=``), the co-packed estimate (``packed_req=``)
+        and the index-scan cost (``scan_flops=``).
+    """
+    import tempfile
+
+    from repro.core import (MockProvider, RequestScheduler,
+                            SemanticContext, llm_embedding, llm_rerank,
+                            rrf)
+    from repro.engine import Pipeline, Table
+    from repro.retrieval import BM25Index, VectorIndex
+
+    n_docs = 80
+    topics = ("joins", "indexes", "vectors", "storage")
+    corpus = Table({
+        "content": [f"passage {i} about {topics[i % 4]} with a body of "
+                    f"searchable text" for i in range(n_docs)],
+        "kind": [topics[i % 4] for i in range(n_docs)],
+    })
+    queries = ["cyclic join algorithms", "vector index scans"]
+    k, c = 5, 12
+    # ~16-token docs at a 600-token window: the corpus plans two full
+    # embed batches plus a part-filled tail that can merge with the
+    # (tiny) query embed batch
+    emb = {"model": "emb", "embedding_dim": 32, "context_window": 600,
+           "max_concurrency": 8}
+    chat = {"model": "chat", "context_window": 8192,
+            "max_output_tokens": 16}
+
+    def build(ctx, query):
+        return (Pipeline(ctx, Table({"q": [query]}), "question")
+                .hybrid_topk("score", emb, "q", corpus, k=k,
+                             doc_col="content", candidate_k=c)
+                .llm_rerank(chat, {"prompt": "most relevant to the "
+                                             "question"},
+                            ["content"], by="q"))
+
+    def embed_requests(ctx):
+        return sum(r.requests for r in ctx.reports
+                   if r.function == "embedding")
+
+    # OFF: isolated per-query sessions, serial, no index store
+    rows_off, req_off = [], 0
+    t0 = time.perf_counter()
+    for q in queries:
+        ctx = SemanticContext(provider=MockProvider(),
+                              enable_cache=False, copack=False)
+        rows_off.append(build(ctx, q).collect().rows())
+        req_off += embed_requests(ctx)
+    dt_off = time.perf_counter() - t0
+
+    # ON: one session — scheduler + co-packing + IndexStore sidecar
+    rows_on, per_query_req = [], []
+    explain_text = None
+    packed_est = est_requests = None
+    with tempfile.TemporaryDirectory() as td:
+        with RequestScheduler(pack_linger_s=0.5) as sched:
+            ctx = SemanticContext(provider=MockProvider(),
+                                  scheduler=sched, enable_cache=False,
+                                  index_path=f"{td}/index.json")
+            t0 = time.perf_counter()
+            for qi, q in enumerate(queries):
+                before = embed_requests(ctx)
+                pipe = build(ctx, q)
+                rows_on.append(pipe.collect().rows())
+                per_query_req.append(embed_requests(ctx) - before)
+                if qi == 0:
+                    explain_text = pipe.explain()
+                    plan = pipe._plan()
+                    packed_est = plan.optimized_cost.packed_requests
+                    est_requests = plan.optimized_cost.requests
+                    scan_est = plan.optimized_cost.scan_flops
+            dt_on = time.perf_counter() - t0
+            req_on = sum(per_query_req)
+            packed_batches = sched.stats.packed_batches
+
+    assert rows_on == rows_off, \
+        "co-packing + index reuse changed the retrieved rows"
+    assert req_on < req_off, \
+        f"expected strictly fewer embed requests, got {req_on} vs " \
+        f"{req_off}"
+    assert per_query_req[1] < per_query_req[0], \
+        "index reuse did not reduce the second query's embed requests"
+    assert packed_est and packed_est < est_requests, \
+        "explain() must report a packed embed-request estimate below " \
+        "the unpacked one"
+    assert "packed_req=" in explain_text
+    assert "scan_flops=" in explain_text
+    assert scan_est > 0
+
+    # imperative composition (the pre-PR idiom): same rows, bit for bit
+    ictx = SemanticContext(provider=MockProvider(), enable_cache=False)
+    texts = [str(x) for x in corpus.column("content")]
+    for q, plan_rows in zip(queries, rows_on):
+        vi = VectorIndex(llm_embedding(ictx, emb, texts))
+        qv = llm_embedding(ictx, emb, [q])
+        v_s, v_idx = vi.topk(qv, c)
+        bm = BM25Index.build(texts)
+        b_scores = bm.score(q)
+        b_top = np.argsort(-b_scores, kind="stable")[:c]
+        col_b = np.full(n_docs, np.nan)
+        col_b[b_top] = b_scores[b_top]
+        col_v = np.full(n_docs, np.nan)
+        col_v[v_idx[0]] = v_s[0]
+        fused = rrf(col_b, col_v)
+        top = np.argsort(-fused, kind="stable")[:k]
+        perm = llm_rerank(ictx, chat,
+                          {"prompt": "most relevant to the question"},
+                          [{"content": texts[i]} for i in top])
+        imp = [(texts[top[p]], float(fused[top[p]])) for p in perm]
+        got = [(r["content"], r["score"]) for r in plan_rows]
+        assert got == imp, "plan rows diverge from the imperative " \
+                           "composition"
+
+    results = {
+        "docs": n_docs, "queries": len(queries), "k": k,
+        "candidate_k": c,
+        "embed_requests_off": req_off,
+        "embed_requests_on": req_on,
+        "per_query_embed_requests_on": per_query_req,
+        "packed_tail_batches": packed_batches,
+        "packed_request_estimate": packed_est,
+        "unpacked_request_estimate": est_requests,
+        "scan_flops_estimate": scan_est,
+        "wall_s_off": round(dt_off, 4), "wall_s_on": round(dt_on, 4),
+    }
+    out_path = Path(__file__).resolve().parent / "BENCH_rag.json"
+    out_path.write_text(json.dumps(results, indent=1))
+
+    _row("rag_off", dt_off * 1e6 / n_docs,
+         f"embed_requests={req_off}")
+    _row("rag_on", dt_on * 1e6 / n_docs,
+         f"embed_requests={req_on} second_query="
+         f"{per_query_req[1]} packed_est={packed_est} "
+         f"json={out_path.name}")
+    return req_off / max(req_on, 1)
+
+
 def bench_caching():
     from repro.core import MockProvider, SemanticContext, llm_complete
     rows = [{"r": f"text {i}"} for i in range(100)]
@@ -655,6 +816,7 @@ _ALL_BENCHES = {
     "scheduler": bench_scheduler,
     "speculative": bench_speculative,
     "copack": bench_copack,
+    "rag": bench_rag,
     "caching": bench_caching,
     "dedup": bench_dedup,
     "fusion_methods": bench_fusion_methods,

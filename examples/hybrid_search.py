@@ -1,12 +1,16 @@
-"""Paper Query 3: full hybrid search in one pipeline.
+"""Paper Query 3: full hybrid search, imperative AND as a plan.
 
     PYTHONPATH=src python examples/hybrid_search.py [--local-jax]
 
-(1) embed the intent, (2) vector-scan the corpus (the topk_sim kernel's
-oracle path), (3) BM25 retrieval, (4) score fusion (rrf + max-norm),
-(5) LLM listwise rerank for "cyclic joins".  With --local-jax the
-embeddings come from a real JAX model served by the continuous-batching
-engine instead of the deterministic mock.
+Imperative composition: (1) embed the intent, (2) vector-scan the
+corpus (the topk_sim kernel's oracle path), (3) BM25 retrieval,
+(4) score fusion (rrf + max-norm), (5) LLM listwise rerank for "cyclic
+joins".  Then the same retrieval as ONE plan — ``hybrid_topk`` ->
+``llm_rerank(by=...)`` — where the optimizer prices embed requests and
+index-scan cost in ``explain()`` and the corpus index is memoised for
+repeated questions.  With --local-jax the embeddings come from a real
+JAX model served by the continuous-batching engine instead of the
+deterministic mock.
 """
 
 import sys
@@ -83,6 +87,21 @@ def main():
     for rank, p in enumerate(perm):
         print(f"  {rank + 1}. {PASSAGES[top10[p]]}")
     print("\nprovider stats:", ctx.provider.stats.snapshot())
+
+    # ---- the same retrieval as ONE plan (first-class operators) -----
+    from repro.engine import Pipeline
+    question = Table({"q": ["cyclic join algorithms"]})
+    pipe = (Pipeline(ctx, question, "question")
+            .hybrid_topk("score", emb_model, "q", research_passages,
+                         k=5, doc_col="content", candidate_k=10)
+            .llm_rerank({"model": "gpt-4o"},
+                        {"prompt": "mentions cyclic joins"},
+                        ["content"], by="q"))
+    result = pipe.collect()
+    print("\nplan-based hybrid_topk -> llm_rerank top-5:")
+    for r in result.rows():
+        print(f"  [{r['score']:.4f}] {r['content']}")
+    print("\n" + pipe.explain())
 
 
 if __name__ == "__main__":

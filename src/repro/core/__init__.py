@@ -6,9 +6,10 @@ dedup — plus fusion for hybrid search.
 """
 
 from .batching import (BatchPlan, BatchStats, ContextOverflowError,
-                       plan_batches, run_adaptive)
-from .cache import (CalibrationStore, PredictionCache, SelectivityStore,
-                    bound_observations, cache_key, headroom_factor)
+                       plan_batches)
+from .cache import (CalibrationStore, IndexStore, PredictionCache,
+                    SelectivityStore, bound_observations, cache_key,
+                    corpus_fingerprint, headroom_factor)
 from .fusion import (FUSION_METHODS, combanz, combmed, combmnz, combsum,
                      fusion, max_normalize, rrf)
 from .functions import (ExecutionReport, SemanticContext, llm_complete,

@@ -10,9 +10,8 @@ what keeps the TPU step dense.
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import List, Sequence
 
 
 class ContextOverflowError(Exception):
@@ -75,24 +74,7 @@ def plan_batches(token_costs: Sequence[int], prefix_tokens: int,
     return BatchPlan(batches=batches, est_tokens=est)
 
 
-def run_adaptive(tuples: Sequence, token_costs: Sequence[int],
-                 prefix_tokens: int, context_window: int,
-                 max_output_tokens: int,
-                 call: Callable[[List[int]], list],
-                 max_batch: int = 0) -> tuple[list, BatchStats]:
-    """Execute ``call(indices) -> per-index results`` under the adaptive
-    protocol.  Returns (results aligned to tuples, stats).
-
-    .. deprecated:: the executor lives in ``scheduler.py`` as
-       ``execute_serial`` (the ``scheduler=None`` path; the concurrent
-       dispatch engine shares its split-and-requeue logic).  This module
-       keeps only the pure planner (``plan_batches``); call
-       ``repro.core.scheduler.execute_serial`` directly."""
-    warnings.warn(
-        "run_adaptive is deprecated; use "
-        "repro.core.scheduler.execute_serial instead",
-        DeprecationWarning, stacklevel=2)
-    from .scheduler import execute_serial
-    return execute_serial(tuples, token_costs, prefix_tokens,
-                          context_window, max_output_tokens, call,
-                          max_batch)
+# NOTE: the deprecated ``run_adaptive`` compat alias was removed; the
+# adaptive executor lives in ``scheduler.py`` as ``execute_serial`` (the
+# ``scheduler=None`` path; the concurrent dispatch engine shares its
+# split-and-requeue logic).  This module keeps only the pure planner.

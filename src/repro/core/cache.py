@@ -239,6 +239,169 @@ def headroom_factor(requests: int, retries: int) -> float:
     return max(HEADROOM_MIN, 1.0 - retries / total)
 
 
+def corpus_fingerprint(texts) -> str:
+    """Order-sensitive content fingerprint of a retrieval corpus.
+
+    Keys the ``IndexStore`` (with the embedding model's ref) so a
+    rebuilt index is reused exactly when the corpus texts AND their
+    order are unchanged — candidate doc ids index into the corpus, so
+    order is part of the identity.  Each text is length-prefixed so no
+    choice of text content can make two different corpora collide
+    (separator bytes inside a text cannot fake a document boundary)."""
+    h = hashlib.sha256()
+    for t in texts:
+        payload = str(t).encode()
+        h.update(str(len(payload)).encode())
+        h.update(b":")
+        h.update(payload)
+    return h.hexdigest()
+
+
+# persisted vector indexes are whole embedding matrices; keep only the
+# most recent corpora so the sidecar stays bounded
+INDEX_STORE_CAPACITY = 8
+
+
+class IndexStore:
+    """JSON sidecar memoising built vector indexes, keyed by
+    ``(embedding model ref, corpus fingerprint)``.
+
+    The expensive part of paper Query 3 is embedding the corpus; a
+    repeated RAG query over an unchanged corpus should pay ZERO embed
+    requests, not a prediction-cache scan over every document.  This
+    sidecar persists the raw embedding matrix next to the prediction
+    cache (default path: the cache's JSONL path + ``.index.json``) with
+    the same discipline as the other sidecars: full-filename ``.tmp``
+    atomic replace, corrupt-file recovery (a bad sidecar loads as empty
+    and the index is rebuilt, never a crash), and ``prune_stale`` drops
+    entries whose model ``name@version`` a catalog resolves to a newer
+    ref.  Bounded to ``INDEX_STORE_CAPACITY`` corpora, oldest first."""
+
+    def __init__(self, path: str, capacity: int = INDEX_STORE_CAPACITY):
+        self.path = Path(path)
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        # file writes serialize on their own lock so get()/has() (the
+        # optimizer's index_cached probe, other retrieval nodes) never
+        # block behind a multi-megabyte sidecar rewrite
+        self._io_lock = threading.Lock()
+        self._version = 0               # bumped per mutation, under _lock
+        self._written = 0               # last version flushed to disk
+        self._data: OrderedDict[str, dict] = OrderedDict()
+        self._load()
+
+    @staticmethod
+    def _key(model_ref: str, fingerprint: str) -> str:
+        return f"{model_ref}|{fingerprint}"
+
+    @staticmethod
+    def _valid(rec) -> bool:
+        if not isinstance(rec, dict):
+            return False
+        vecs = rec.get("vectors")
+        if not isinstance(vecs, list) or not vecs:
+            return False
+        width = {len(v) if isinstance(v, list) else -1 for v in vecs}
+        if len(width) != 1 or -1 in width:
+            return False
+        return all(isinstance(x, (int, float)) and x == x
+                   for v in vecs for x in v)
+
+    def _load(self):
+        if not self.path.exists():
+            return
+        try:
+            data = json.loads(self.path.read_text())
+        except (json.JSONDecodeError, OSError):
+            return
+        if not isinstance(data, dict):
+            return
+        for key, rec in data.get("indexes", {}).items():
+            if self._valid(rec):
+                self._data[key] = rec
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+
+    def get(self, model_ref: str, fingerprint: str):
+        """The stored embedding matrix as float32, or None."""
+        import numpy as np
+        with self._lock:
+            rec = self._data.get(self._key(model_ref, fingerprint))
+            if rec is None:
+                return None
+            return np.asarray(rec["vectors"], np.float32)
+
+    def _write_snapshot(self, snapshot: dict, version: int):
+        """Persist one mutation's snapshot.  The version guard makes a
+        late writer with a stale snapshot a no-op, so concurrent puts
+        cannot roll the file back to a state missing a newer entry."""
+        payload = json.dumps({"indexes": snapshot})
+        with self._io_lock:
+            if version <= self._written:
+                return
+            tmp = _tmp_path(self.path)
+            tmp.write_text(payload)
+            tmp.replace(self.path)
+            self._written = version
+
+    def put(self, model_ref: str, fingerprint: str, vectors):
+        import numpy as np
+        v = np.asarray(vectors, np.float32)
+        if v.ndim != 2 or not v.size:
+            return
+        # float32 -> python float -> float32 roundtrips exactly, so a
+        # reloaded index reproduces the in-session one bit-for-bit
+        rec = {"vectors": [[float(x) for x in row] for row in v]}
+        with self._lock:
+            self._data[self._key(model_ref, fingerprint)] = rec
+            self._data.move_to_end(self._key(model_ref, fingerprint))
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+            self._version += 1
+            version = self._version
+            snapshot = dict(self._data)
+        self._write_snapshot(snapshot, version)
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._data)
+
+    def has(self, model_ref: str, fingerprint: str) -> bool:
+        with self._lock:
+            return self._key(model_ref, fingerprint) in self._data
+
+    @staticmethod
+    def prune_stale(keys, catalog) -> list:
+        """Which of ``keys`` (``ref|fingerprint`` strings) survive: keys
+        whose model ``name@version`` is superseded by a newer catalog
+        version are stale (a re-versioned embedding model produces
+        different vectors)."""
+        out = []
+        for key in keys:
+            ref = key.split("|", 1)[0]
+            name, sep, _ = ref.rpartition("@")
+            if sep:
+                live = catalog.get_model(name)
+                if live is not None and live.ref != ref:
+                    continue
+            out.append(key)
+        return out
+
+    def prune(self, catalog):
+        """Drop stale entries in place (called at session start)."""
+        with self._lock:
+            live = set(self.prune_stale(list(self._data), catalog))
+            stale = [k for k in self._data if k not in live]
+            for k in stale:
+                del self._data[k]
+            if not (stale and self.path.exists()):
+                return
+            self._version += 1
+            version = self._version
+            snapshot = dict(self._data)
+        self._write_snapshot(snapshot, version)
+
+
 class CalibrationStore:
     """JSON sidecar persisting per-model execution statistics aggregated
     from ``ExecutionReport``s: request/retry counts, tuples served (mean

@@ -41,8 +41,10 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from .cache import (CALIBRATION_COUNT_WINDOW, CALIBRATION_WINDOW,
-                    CalibrationStore, PredictionCache, SelectivityStore,
-                    bound_observations, cache_key, headroom_factor)
+                    CalibrationStore, IndexStore, PredictionCache,
+                    SelectivityStore, bound_observations, cache_key,
+                    headroom_factor)
+from .batching import plan_batches
 from .metaprompt import (build_metaprompt, build_multi_task, build_prefix,
                          serialize_tuple)
 from .provider import BaseProvider, MockProvider, estimate_tokens
@@ -85,7 +87,8 @@ class SemanticContext:
                  selectivity_path: Optional[str] = None,
                  speculate=False, speculate_waste_cap: float = 1.0,
                  calibration_path: Optional[str] = None,
-                 copack: bool = True):
+                 copack: bool = True,
+                 index_path: Optional[str] = None):
         self.catalog = catalog or Catalog()
         self.provider = provider or MockProvider()
         self.cache = cache or PredictionCache()
@@ -156,6 +159,18 @@ class SemanticContext:
         if self.calibration_store is not None:
             self.calibration_stats.update(CalibrationStore.prune_stale(
                 self.calibration_store.load(), self.catalog))
+        # vector-index memoisation (retrieval plan operators): a
+        # session-local registry of built VectorIndex objects keyed by
+        # (model ref, corpus fingerprint), plus the persistent
+        # ``IndexStore`` sidecar so a repeated RAG query over an
+        # unchanged corpus skips re-embedding entirely
+        self._index_registry: Dict[Any, Any] = {}
+        self._index_lock = threading.Lock()
+        if index_path is None and self.cache.persist_path is not None:
+            index_path = str(self.cache.persist_path) + ".index.json"
+        self.index_store = IndexStore(index_path) if index_path else None
+        if self.index_store is not None:
+            self.index_store.prune(self.catalog)
         # calibration-aware batch sizing: per-model planning headroom is
         # SNAPSHOT from the loaded statistics (a model that routinely
         # overflowed last session plans smaller batches up front this
@@ -210,6 +225,28 @@ class SemanticContext:
             return False
         with self._lock:
             return identity in self._copack_active
+
+    # ---- vector-index registry (retrieval plan operators) ------------------
+    def lookup_index(self, key):
+        """Session-local built-index lookup: ``key`` is ``(model ref,
+        corpus fingerprint)``; None when no node built it yet."""
+        with self._index_lock:
+            return self._index_registry.get(key)
+
+    def store_index(self, key, index):
+        with self._index_lock:
+            self._index_registry[key] = index
+
+    def index_cached(self, model_ref: str, fingerprint: str) -> bool:
+        """Would a retrieval node over this (model, corpus) skip the
+        corpus embed?  Feeds the optimizer's cost model (an index found
+        in the session registry or the persistent sidecar makes the
+        node's embed estimate queries-only)."""
+        with self._index_lock:
+            if (model_ref, fingerprint) in self._index_registry:
+                return True
+        return (self.index_store is not None
+                and self.index_store.has(model_ref, fingerprint))
 
     # ---- selectivity bookkeeping (filter reordering) -----------------------
     def record_selectivity(self, prompt_id: str, passed: int, total: int):
@@ -643,12 +680,29 @@ def llm_multi(ctx, model_spec, subtasks: Sequence[dict],
     return per_task
 
 
+def embedding_pack_key(ctx: SemanticContext, model: ModelResource):
+    """Metaprompt-prefix identity of an embedding dispatch.  Embeddings
+    have no prompt and no serialization framing (raw text payloads), so
+    two dispatches co-pack exactly when they target the same provider
+    and the same fully-resolved model — mirrored by
+    ``pipeline.copack_identity`` for ``llm_embedding`` plan nodes and by
+    the retrieval operators' corpus/query embed pairing."""
+    return (id(ctx.provider), model, "embedding", "raw", "")
+
+
 def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
     """Embedding with dedup + cache (no prompt; paper: 48x from batching).
 
-    Shares the staged path: dedup -> cache -> dispatch; with a scheduler
-    the embed batches ride the same concurrent engine (and single-flight
-    registry) as the chat-completion map functions."""
+    Shares the staged path: dedup -> cache -> batch-plan -> dispatch.
+    Batches are planned by ``plan_batches`` against the model's context
+    window with its calibrated headroom (embeddings decode no output
+    tokens, so the whole budget is payload) — NOT shipped as one
+    unplanned mega-batch — and per-batch stats feed the calibration
+    sidecar, so the cost model learns embedding batch sizes too.  With
+    a scheduler the embed batches ride the same concurrent engine (and
+    single-flight registry) as the chat-completion map functions, and a
+    part-filled tail batch may co-pack with another embed dispatch that
+    shares this model (``embedding_pack_key``)."""
     model = ctx.resolve_model(model_spec)
     rep = ExecutionReport(function="embedding", n_tuples=len(tuples),
                           serialization=ctx.serialization)
@@ -660,11 +714,11 @@ def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
     keys = [cache_key(model.ref, "", "embedding", "raw", t) for t in order]
     vecs, todo = _cache_stage(ctx, keys, rep)
     if todo:
-        # positions index into ``todo`` (the scheduler contract)
-        if ctx.enable_batching:
-            batches = [list(range(len(todo)))]
-        else:
-            batches = [[j] for j in range(len(todo))]
+        costs = [estimate_tokens(order[i]) for i in todo]
+        mb = ctx.max_batch if ctx.enable_batching else 1
+        headroom = (ctx.batch_headroom(model.ref) if ctx.enable_batching
+                    else 1.0)
+        window = model.context_window
 
         def run(positions: List[int]) -> List[list]:
             em = ctx.provider.embed(model,
@@ -672,33 +726,43 @@ def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
             return [em[j].tolist() for j in range(len(positions))]
 
         if ctx.scheduler is not None:
+            def plan(owned: List[int]) -> List[List[int]]:
+                bp = plan_batches([costs[p] for p in owned], 0, window,
+                                  0, mb, headroom=headroom)
+                return [[owned[j] for j in b] for b in bp.batches]
+
+            pack = None
+            pack_key = embedding_pack_key(ctx, model)
+            if ctx.copack_eligible(pack_key):
+                def pack_call(rows: List[str]) -> List[list]:
+                    em = ctx.provider.embed(model, rows)
+                    return [em[j].tolist() for j in range(len(rows))]
+
+                pack = {"key": pack_key,
+                        "rows": [order[i] for i in todo],
+                        "call": pack_call,
+                        "budget": int(window * headroom),
+                        "max_batch": mb, "weights": costs}
             job = ctx.scheduler.submit(
-                model, [keys[i] for i in todo], run, batches,
+                model, [keys[i] for i in todo], run,
                 cache=ctx.cache if ctx.enable_cache else None,
-                single_flight=ctx.enable_cache)
+                single_flight=ctx.enable_cache, plan=plan, pack=pack)
             out, stats = job.result()
             rep.coalesced = job.coalesced
             rep.cache_hits += job.late_hits
-            rep.requests, rep.batch_sizes = stats.requests, \
-                stats.batch_sizes
-            rep.latencies = stats.latencies
-            ctx.record_calibration(model.ref, stats.requests,
-                                   stats.retries, sum(stats.batch_sizes),
-                                   stats.latencies)
+            rep.packed = stats.packed
         else:
-            out = [None] * len(todo)
-            for b in batches:
-                t0 = time.monotonic()
-                em = run(b)
-                rep.latencies.append(time.monotonic() - t0)
-                rep.requests += 1
-                rep.batch_sizes.append(len(b))
-                for j, p in enumerate(b):
-                    out[p] = em[j]
-                    if ctx.enable_cache:
-                        ctx.cache.put(keys[todo[p]], em[j])
-            ctx.record_calibration(model.ref, rep.requests, 0,
-                                   sum(rep.batch_sizes), rep.latencies)
+            out, stats = execute_serial(todo, costs, 0, window, 0, run,
+                                        max_batch=mb, headroom=headroom)
+            if ctx.enable_cache:
+                for j, i in enumerate(todo):
+                    if out[j] is not None:
+                        ctx.cache.put(keys[i], out[j])
+        rep.requests, rep.retries = stats.requests, stats.retries
+        rep.batch_sizes = stats.batch_sizes
+        rep.latencies = stats.latencies
+        ctx.record_calibration(model.ref, stats.requests, stats.retries,
+                               sum(stats.batch_sizes), stats.latencies)
         for j, i in enumerate(todo):
             vecs[i] = out[j]
     return np.asarray([vecs[b] for b in back], np.float32)

@@ -1,4 +1,5 @@
 from .table import Table
 from .pipeline import Pipeline, PlanNode, ask, copack_identity
+from .retrieval_ops import RETRIEVAL_OPS
 from .optimizer import (OptimizedPlan, PlanCost, estimate_plan_cost,
                         optimize_plan)

@@ -78,6 +78,7 @@ from repro.core.metaprompt import build_multi_task, build_prefix, \
     serialize_tuple
 from repro.core.provider import estimate_tokens
 
+from .retrieval_ops import RETRIEVAL_OPS, pushed_candidate_k
 from .table import Table
 
 # node taxonomy --------------------------------------------------------------
@@ -124,7 +125,13 @@ class PlanCost:
 
     ``tokens`` counts estimated PROMPT tokens (tuple payloads + one
     prefix per request); expected output tokens shape the batch plans
-    but are not part of the token totals."""
+    but are not part of the token totals.
+
+    ``scan_flops`` is the retrieval operators' index-scan cost estimate
+    (vector scan ~ 2*N*D per query, BM25 postings scan ~ N per query,
+    fusion ~ N per query) — provider-free work, reported separately so
+    ``explain()`` shows a RAG plan's full retrieval cost next to its
+    embed requests."""
     requests: int = 0
     tokens: int = 0
     rows_into_llm: int = 0      # tuples fed to semantic ops, post-dedup-free
@@ -132,6 +139,7 @@ class PlanCost:
     wall_s: float = 0.0         # calibrated latency estimate (0 = no data)
     wasted_requests: int = 0    # expected speculative-request overshoot
     packed_requests: int = 0    # request estimate with tail co-packing
+    scan_flops: float = 0.0     # retrieval index-scan cost (non-provider)
 
     def __str__(self):
         s = (f"requests={self.requests} tokens={self.tokens} "
@@ -142,6 +150,8 @@ class PlanCost:
             s += f" wasted_requests={self.wasted_requests}"
         if self.packed_requests and self.packed_requests != self.requests:
             s += f" packed_req={self.packed_requests}"
+        if self.scan_flops:
+            s += f" scan_flops={self.scan_flops:.2e}"
         return s
 
 
@@ -292,12 +302,100 @@ def _filter_estimate(ctx: SemanticContext, member: dict, n: int,
     return requests, tokens
 
 
+def _avg_text_tokens(values) -> int:
+    """Mean token estimate of raw text values (corpus docs, query
+    strings), sampled like ``_avg_tuple_tokens``."""
+    vals = list(values)[:_SAMPLE_ROWS]
+    if not vals:
+        return 1
+    return max(1, sum(estimate_tokens(str(v)) for v in vals) // len(vals))
+
+
+def _retrieval_estimate(ctx: SemanticContext, node, rows_in: float,
+                        source: Table,
+                        seen_corpus: set) -> Tuple[float, PlanCost]:
+    """(rows_out, cost) for a retrieval operator.
+
+    Embed requests come from ``plan_batches`` over the corpus + query
+    text streams (no output tokens, calibrated per-model headroom);
+    a corpus whose index is memoised — by an earlier node of this plan
+    (``seen_corpus``), the session registry, or the ``IndexStore``
+    sidecar — charges the query embeds only.  ``scan_flops`` covers the
+    provider-free index-scan work, and ``packed_requests`` the embed
+    estimate with corpus/query tail co-packing."""
+    op, info = node.op, node.info
+    cost = PlanCost()
+    nq = max(int(round(rows_in)), 0)
+    corpus_rows = info.get("corpus_rows", len(info["corpus"]))
+    sel_rows = corpus_rows
+    if info.get("corpus_filter") is not None:
+        sel_rows = max(1, int(round(corpus_rows * DEFAULT_SELECTIVITY)))
+    rows_out = float(nq * min(info["k"], sel_rows))
+    if nq == 0 or corpus_rows == 0:
+        return rows_out, cost
+
+    if op != "vector_topk":         # bm25 or hybrid: postings scan
+        cost.scan_flops += float(nq * corpus_rows)
+    if op == "hybrid_topk":         # fusion over full-length arrays
+        cost.scan_flops += float(nq * corpus_rows)
+    if op == "bm25_topk":
+        return rows_out, cost
+
+    model = ctx.resolve_model(info["model"])
+    dim = model.embedding_dim or 64
+    scan_docs = sel_rows if info.get("prune_corpus") else corpus_rows
+    cost.scan_flops += 2.0 * nq * scan_docs * dim
+
+    per_doc = _avg_text_tokens(info["corpus"].column(info["doc_col"]))
+    qcol = info.get("query_col")
+    per_q = (_avg_text_tokens(source.columns[qcol])
+             if qcol in source.columns else DEFAULT_COL_TOKENS)
+    key = (model.ref, info.get("corpus_fp"), bool(info.get(
+        "prune_corpus")) and info.get("corpus_filter") is not None)
+    cached = key in seen_corpus
+    if not cached and not key[2] and info.get("corpus_fp"):
+        cached = ctx.index_cached(model.ref, info["corpus_fp"])
+    embed_docs = 0 if cached else (
+        sel_rows if info.get("prune_corpus") else corpus_rows)
+    seen_corpus.add(key)
+
+    mb = ctx.max_batch if ctx.enable_batching else 1
+    headroom = ctx.batch_headroom(model.ref)
+    window = model.context_window
+    corpus_costs = [per_doc] * embed_docs
+    query_costs = [per_q] * nq
+    requests, tokens = 0, 0
+    for costs in (corpus_costs, query_costs):
+        if not costs:
+            continue
+        plan = plan_batches(costs, 0, window, 0, mb, headroom=headroom)
+        requests += len(plan.batches)
+        tokens += sum(plan.est_tokens)
+    cost.requests = requests
+    cost.tokens = tokens
+    cost.rows_into_llm = embed_docs + nq
+    limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+    cost.waves = -(-requests // limit) if requests else 0
+    copack_on = (getattr(ctx, "copack", False)
+                 and ctx.scheduler is not None and ctx.enable_batching)
+    if copack_on and corpus_costs and query_costs:
+        joint = plan_batches(corpus_costs + query_costs, 0, window, 0,
+                             mb, headroom=headroom)
+        if len(joint.batches) < requests:
+            cost.packed_requests = len(joint.batches)
+    return rows_out, cost
+
+
 def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
-                       source: Table) -> Tuple[float, PlanCost]:
+                       source: Table,
+                       seen_corpus: Optional[set] = None
+                       ) -> Tuple[float, PlanCost]:
     """(rows_out, provider cost) for one node under the cost model.
 
     Cardinalities flow through: relational filters halve, llm_filters use
-    recorded selectivity, limit truncates, maps preserve."""
+    recorded selectivity, limit truncates, maps preserve, retrieval
+    operators expand to k rows per query.  ``seen_corpus`` threads the
+    shared-corpus embed dedupe across the nodes of one plan."""
     op, info = node.op, node.info
     cost = PlanCost()
     rows = rows_in
@@ -308,6 +406,11 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
         return min(rows, info.get("n", rows)), cost
     if op in ("select", "order_by", "project", "scan"):
         return rows, cost
+
+    if op in RETRIEVAL_OPS:
+        return _retrieval_estimate(ctx, node, rows, source,
+                                   set() if seen_corpus is None
+                                   else seen_corpus)
 
     if op == "llm_spec_chain":
         # speculative mask-join: every member runs over the full chain
@@ -457,16 +560,25 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
     #                            standalone waves, standalone wall)
     entry_rows: dict = {}     # id(node) -> rows flowing INTO the node
     rows = float(len(source))
+    seen_corpus: set = set()      # shared-corpus embed dedupe across nodes
+    node_packed_saved = 0
     for node in nodes:
         entry_rows[id(node)] = rows
-        rows, c = estimate_node_cost(ctx, node, rows, source)
-        per_node.append({"rows": int(round(rows)),
-                         "requests": c.requests, "tokens": c.tokens})
+        rows, c = estimate_node_cost(ctx, node, rows, source, seen_corpus)
+        nd = {"rows": int(round(rows)),
+              "requests": c.requests, "tokens": c.tokens}
+        if c.scan_flops:
+            nd["scan_flops"] = c.scan_flops
+        per_node.append(nd)
         total.requests += c.requests
         total.tokens += c.tokens
         total.rows_into_llm += c.rows_into_llm
+        total.scan_flops += c.scan_flops
+        if c.packed_requests and c.packed_requests < c.requests:
+            node_packed_saved += c.requests - c.packed_requests
         ref, limit = "", 1
-        if node.op in SEMANTIC_OPS and c.requests:
+        if (c.requests and "model" in node.info
+                and (node.op in SEMANTIC_OPS or node.op in RETRIEVAL_OPS)):
             m = ctx.resolve_model(node.info["model"])
             ref = m.ref
             limit = max(1, getattr(m, "max_concurrency", 1) or 1)
@@ -519,6 +631,7 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
             total.wall_s += group_wall
     if uncalibrated:
         total.wall_s = 0.0
+    packed_saved += node_packed_saved
     if packed_saved:
         total.packed_requests = max(0, total.requests - packed_saved)
     return total, per_node
@@ -539,6 +652,15 @@ def _commutes_before(rel, sem) -> bool:
     if r == "filter":
         if s == "llm_filter":
             return True
+        if s in RETRIEVAL_OPS:
+            # a filter over query-side columns commutes with the LATERAL
+            # expansion (candidate rows replicate the query columns);
+            # one reading the node's outputs (scores, ranks, corpus
+            # columns) must stay above it
+            deps = rel.info.get("cols")
+            if deps is None:
+                return False               # opaque predicate: stay put
+            return not (set(deps) & set(sem.info.get("outs", ())))
         if s in ("llm_complete", "llm_complete_json", "llm_embedding",
                  "project"):
             deps = rel.info.get("cols")
@@ -549,8 +671,10 @@ def _commutes_before(rel, sem) -> bool:
         return False
     if r == "select":
         if s in ("llm_filter", "llm_rerank"):
-            return set(sem.info.get("cols", ())) <= set(
-                rel.info.get("cols", ()))
+            needed = set(sem.info.get("cols", ()))
+            if sem.info.get("by") is not None:
+                needed.add(sem.info["by"])     # grouped rerank key
+            return needed <= set(rel.info.get("cols", ()))
         return False
     if r == "order_by":
         key = rel.info.get("key")
@@ -573,13 +697,86 @@ def _pushdown(nodes: List, rewrites: List[str]) -> List:
         changed = False
         for i in range(len(nodes) - 1):
             a, b = nodes[i], nodes[i + 1]
-            if (a.op in SEMANTIC_OPS + ("project",)
+            if (a.op in SEMANTIC_OPS + RETRIEVAL_OPS + ("project",)
                     and b.op in RELATIONAL_OPS
                     and _commutes_before(b, a)):
                 nodes[i], nodes[i + 1] = b, a
                 rewrites.append(f"pushdown({b.op} before {a.op})")
                 changed = True
     return nodes
+
+
+# ---------------------------------------------------------------------------
+# rule 1b: retrieval rewrites (corpus pruning, k-pushdown, embed dedupe)
+# ---------------------------------------------------------------------------
+def _retrieval_rewrites(ctx: SemanticContext, nodes: List,
+                        rewrites: List[str]) -> List:
+    """Monotone retrieval-operator rewrites (never cost-gated — each one
+    only ever removes work):
+
+    * ``prune_corpus`` — a node carrying a ``corpus_filter`` embeds only
+      the matching docs instead of embedding everything and masking the
+      ranking.  Result-preserving by construction: per-doc vector scores
+      are independent of the rest of the corpus, the selection and the
+      tie-break are identical either way, and BM25 statistics always
+      come from the full corpus.
+    * ``k_pushdown`` — ``hybrid_topk(candidate_k=None)`` fuses FULL
+      per-retriever candidate lists unoptimized; the rewrite pushes the
+      final k into a per-retriever depth of ``max(32, 4k)`` (the
+      engine-chosen physical depth, like a batch size).
+    * ``dedupe_corpus_embed`` — notes nodes sharing (model, corpus
+      fingerprint) with an earlier node; at runtime the session index
+      registry / ``IndexStore`` serves them without re-embedding, and
+      the cost model charges the corpus embed once.
+
+    Rewritten nodes are REBUILT (fresh info dict + executor closure) so
+    the shared logical plan is never mutated."""
+    from .pipeline import PlanNode              # local import: avoid cycle
+    from .retrieval_ops import make_retrieval_fn
+
+    out: List = []
+    seen: set = set()
+    for node in nodes:
+        if node.op not in RETRIEVAL_OPS:
+            out.append(node)
+            continue
+        info = node.info
+        changes: dict = {}
+        if (info.get("corpus_filter") is not None
+                and not info.get("prune_corpus")
+                and node.op != "bm25_topk"):
+            changes["prune_corpus"] = True
+            rewrites.append(f"prune_corpus({node.op}: corpus filter "
+                            f"below the index build)")
+        if node.op == "hybrid_topk" and not info.get("candidate_k"):
+            c = pushed_candidate_k(info["k"])
+            if c < info.get("corpus_rows", 0):
+                changes["candidate_k"] = c
+                rewrites.append(
+                    f"k_pushdown(hybrid_topk: k={info['k']} -> "
+                    f"per-retriever candidate_k={c})")
+        if "model" in info and info.get("corpus_fp"):
+            try:
+                ref = ctx.resolve_model(info["model"]).ref
+            except KeyError:
+                ref = None
+            if ref is not None:
+                key = (ref, info["corpus_fp"])
+                if key in seen:
+                    rewrites.append(
+                        f"dedupe_corpus_embed({node.op}: corpus index "
+                        f"shared with an earlier node)")
+                seen.add(key)
+        if changes:
+            new_info = dict(info)
+            new_info.pop("_bm25", None)
+            new_info.update(changes)
+            out.append(PlanNode(node.op, new_info,
+                                make_retrieval_fn(ctx, node.op,
+                                                  new_info)))
+        else:
+            out.append(node)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -920,6 +1117,7 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
     naive = [n for n in nodes]
     rewrites: List[str] = []
     new = _pushdown(list(nodes), rewrites)
+    new = _retrieval_rewrites(ctx, new, rewrites)
 
     cost, _ = estimate_plan_cost(ctx, source, new)
     for rule in (_reorder_filters, _fuse):

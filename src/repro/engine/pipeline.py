@@ -59,6 +59,19 @@ sidecar) and the expected waste — predicted from recorded selectivity
 and capped by ``ctx.speculate_waste_cap`` — is reported in
 ``explain()``'s "Speculation:" section.
 
+**First-class retrieval operators** (``retrieval_ops.py``): paper
+Query 3 is a plan, not a script — ``vector_topk`` / ``bm25_topk`` /
+``hybrid_topk`` expand each query row into its top-k candidate rows (a
+LATERAL join over the corpus), ``hybrid_topk`` fuses both retrievers
+with the paper's FUSION table methods (rrf/combsum/...), and
+``llm_rerank(by=...)`` reranks each query's candidate list through the
+existing map path.  Because retrieval is IN the plan, the optimizer
+prunes filtered corpora before embedding, pushes query-side filters
+below the expansion, pushes k into per-retriever candidate depth,
+dedupes shared corpus embeddings (session registry + the persistent
+``IndexStore`` sidecar), and ``explain()`` prices the embed requests,
+their co-packed estimate, and the index-scan cost.
+
 Relational ``filter`` predicates are opaque closures; pass
 ``filter(pred, cols=[...])`` to declare the columns the predicate reads
 and unlock pushdown past column-producing semantic ops.
@@ -88,21 +101,26 @@ _PARALLEL_MAP_OPS = ("llm_complete", "llm_complete_json", "llm_embedding")
 # plan ops whose dispatches can co-pack: their metaprompt prefix is fully
 # determined by (model, function kind, serialization, prompt text), so
 # two nodes agreeing on that tuple produce byte-identical static prefixes
-# and their rows can share one provider request
+# and their rows can share one provider request.  Embedding dispatches
+# have no prompt at all, so they co-pack on the model alone.
 _COPACK_KINDS = {"llm_complete": "complete",
-                 "llm_complete_json": "complete_json"}
+                 "llm_complete_json": "complete_json",
+                 "llm_embedding": "embedding"}
 
 
 def copack_identity(ctx: SemanticContext, node: "PlanNode"):
     """Metaprompt-prefix identity of a map node, or ``None`` when the
     node cannot co-pack.  Must mirror the ``pack_key`` computed by
-    ``functions._map_core`` — the scheduler's packing queue merges tail
+    ``functions._map_core`` (and ``functions.embedding_pack_key`` for
+    embedding dispatches) — the scheduler's packing queue merges tail
     batches exactly when these tuples compare equal."""
     kind = _COPACK_KINDS.get(node.op)
     if kind is None:
         return None
     try:
         model = ctx.resolve_model(node.info["model"])
+        if kind == "embedding":
+            return F.embedding_pack_key(ctx, model)
         text, _ = ctx.resolve_prompt(node.info["prompt"])
     except KeyError:
         return None
@@ -194,14 +212,89 @@ class Pipeline:
         return self._add("llm_embedding", fn, model=model, cols=cols,
                          out=out)
 
+    # ---- retrieval operators -------------------------------------------------
+    def _add_retrieval(self, op: str, info: dict) -> "Pipeline":
+        from .retrieval_ops import make_retrieval_fn, retrieval_outputs
+        from repro.core.cache import corpus_fingerprint
+        info["corpus_rows"] = len(info["corpus"])
+        info["corpus_fp"] = corpus_fingerprint(
+            [str(x) for x in info["corpus"].column(info["doc_col"])])
+        info["outs"] = retrieval_outputs(info)
+        return self._add(op, make_retrieval_fn(self.ctx, op, info), **info)
+
+    def vector_topk(self, out: str, model, query_col: str, corpus: Table,
+                    k: int, doc_col: str = "text", corpus_filter=None,
+                    corpus_filter_cols: Optional[Sequence[str]] = None):
+        """Paper Query 3 step 2 as a plan node: embed ``query_col``,
+        scan the corpus embedding index, expand each query row into its
+        top-``k`` candidate rows (corpus columns + cosine score ``out``
+        + ``out_rank``).  ``corpus_filter`` restricts retrieval to
+        matching corpus docs; the optimizer's ``prune_corpus`` rewrite
+        then embeds only those (identical rows, fewer embed requests)."""
+        return self._add_retrieval("vector_topk", dict(
+            out=out, model=model, query_col=query_col, corpus=corpus,
+            k=k, doc_col=doc_col, corpus_filter=corpus_filter,
+            corpus_filter_cols=(None if corpus_filter_cols is None
+                                else list(corpus_filter_cols)),
+            cols=[query_col]))
+
+    def bm25_topk(self, out: str, query_col: str, corpus: Table, k: int,
+                  doc_col: str = "text", corpus_filter=None,
+                  corpus_filter_cols: Optional[Sequence[str]] = None):
+        """Paper Query 3 step 3 as a plan node: the BM25 FTS retriever —
+        no LLM calls.  Index statistics always come from the full
+        corpus, so results are independent of optimizer rewrites."""
+        return self._add_retrieval("bm25_topk", dict(
+            out=out, query_col=query_col, corpus=corpus, k=k,
+            doc_col=doc_col, corpus_filter=corpus_filter,
+            corpus_filter_cols=(None if corpus_filter_cols is None
+                                else list(corpus_filter_cols)),
+            cols=[query_col]))
+
+    def hybrid_topk(self, out: str, model, query_col: str, corpus: Table,
+                    k: int, fusion: str = "rrf", doc_col: str = "text",
+                    candidate_k: Optional[int] = None, corpus_filter=None,
+                    corpus_filter_cols: Optional[Sequence[str]] = None):
+        """Paper Query 3 steps 2-4 as one plan node: vector + BM25
+        retrievers at per-retriever depth ``candidate_k``, fused with
+        ``core.fusion`` (Table 1: rrf/combsum/...), final top-``k`` by
+        fused score.  ``candidate_k=None`` lets the engine choose the
+        depth: full candidate lists unoptimized, ``k`` pushed down to
+        ``max(32, 4k)`` per retriever by the optimizer."""
+        return self._add_retrieval("hybrid_topk", dict(
+            out=out, model=model, query_col=query_col, corpus=corpus,
+            k=k, fusion=fusion, doc_col=doc_col, candidate_k=candidate_k,
+            corpus_filter=corpus_filter,
+            corpus_filter_cols=(None if corpus_filter_cols is None
+                                else list(corpus_filter_cols)),
+            cols=[query_col]))
+
     # ---- semantic aggregates ---------------------------------------------------
-    def llm_rerank(self, model, prompt, cols: Sequence[str]):
+    def llm_rerank(self, model, prompt, cols: Sequence[str],
+                   by: Optional[str] = None):
+        """Listwise LLM rerank.  Without ``by`` the whole table is one
+        candidate list; with ``by`` rows rerank WITHIN each group of
+        equal ``by`` values (paper Query 3 step 5 over a retrieval
+        operator's expansion: one candidate list per query row), groups
+        keeping their first-seen order."""
         def fn(t: Table) -> Table:
             tuples = [{c: r[c] for c in cols} for r in t.rows()]
-            perm = F.llm_rerank(self.ctx, model, prompt, tuples)
-            return t.take(perm)
-        return self._add("llm_rerank", fn, model=model, prompt=prompt,
-                         cols=cols)
+            if by is None:
+                perm = F.llm_rerank(self.ctx, model, prompt, tuples)
+                return t.take(perm)
+            groups: dict = {}
+            for i, v in enumerate(t.column(by)):
+                groups.setdefault(v, []).append(i)
+            order: List[int] = []
+            for idxs in groups.values():
+                perm = F.llm_rerank(self.ctx, model, prompt,
+                                    [tuples[i] for i in idxs])
+                order.extend(idxs[p] for p in perm)
+            return t.take(order)
+        info = {"model": model, "prompt": prompt, "cols": cols}
+        if by is not None:
+            info["by"] = by
+        return self._add("llm_rerank", fn, **info)
 
     # ---- execution -----------------------------------------------------------
     def _plan(self, speculate=None):
@@ -407,12 +500,17 @@ class Pipeline:
             info = {k: v for k, v in node.info.items()
                     if k not in ("model", "prompt", "prompts",
                                  "prompt_ids", "member_specs",
-                                 "member_masks", "member_report_slots")}
+                                 "member_masks", "member_report_slots",
+                                 "corpus", "corpus_filter", "outs")
+                    and not k.startswith("_")}
             est = node_costs[i] if i < len(node_costs) else None
             est_s = ""
-            if est and est["requests"]:
+            if est and (est["requests"] or est.get("scan_flops")):
                 est_s = (f"  est[rows->{est['rows']} "
-                         f"req={est['requests']} tok={est['tokens']}]")
+                         f"req={est['requests']} tok={est['tokens']}")
+                if est.get("scan_flops"):
+                    est_s += f" scan_flops={est['scan_flops']:.2e}"
+                est_s += "]"
             lines.append(f"  [{i}] {node.op:18s} {info}{est_s}")
             if node.report_slot is not None:
                 self._render_report(lines, node.report_slot)

@@ -71,6 +71,34 @@ class Table:
     def limit(self, n: int) -> "Table":
         return self.head(n)
 
+    def lateral(self, fn) -> "Table":
+        """LATERAL join: ``fn(i, row) -> Table`` of matches per row; the
+        parent row's columns replicate once per match (paper Query 3:
+        a retrieval operator expands each query row into its top-k
+        candidate rows).  Match tables must share one schema; a row with
+        an empty match table contributes no output rows."""
+        parents = self.rows()
+        matches = [fn(i, r) for i, r in enumerate(parents)]
+        child_names: List[str] = []
+        for m in matches:
+            if m.column_names:
+                child_names = m.column_names
+                break
+        out: Dict[str, list] = {n: [] for n in self.column_names}
+        for n in child_names:
+            if n in out:
+                raise ValueError(
+                    f"lateral match column {n!r} collides with a parent "
+                    f"column")
+            out[n] = []
+        for row, m in zip(parents, matches):
+            k = len(m)
+            for n in self.column_names:
+                out[n].extend([row[n]] * k)
+            for n in child_names:
+                out[n].extend(m.columns[n])
+        return Table(out)
+
     def full_outer_join(self, other: "Table", on: str,
                         suffixes=("_l", "_r")) -> "Table":
         """FULL OUTER JOIN on one key column (paper Query 3 fusion step);

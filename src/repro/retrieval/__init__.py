@@ -1,2 +1,2 @@
 from .bm25 import BM25Index, tokenize
-from .vector import VectorIndex, cosine_topk
+from .vector import VectorIndex, active_mesh, cosine_topk, ensure_index

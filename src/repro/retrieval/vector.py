@@ -3,6 +3,16 @@
 ``cosine_topk`` is the jnp oracle for the ``topk_sim`` Pallas kernel: the
 corpus-side scan is a blocked matmul with a running top-k, sharded over the
 (data, model) mesh when a policy is supplied.
+
+``VectorIndex`` is the materialised index behind the ``vector_topk`` /
+``hybrid_topk`` plan operators (``engine.retrieval_ops``): built indexes
+are memoised per session and in the persistent ``IndexStore`` sidecar via
+``ensure_index``, keyed by (embedding model ref, corpus fingerprint), so a
+repeated RAG query over an unchanged corpus skips re-embedding.  When a
+JAX mesh with more than one device is active (an enclosing ``with mesh:``
+block, or an explicit ``mesh=`` argument), the corpus scan routes through
+``distributed.sharded_topk`` — corpus rows shard over the mesh, queries
+replicate, and only (Q, devices*k) candidates all-gather.
 """
 
 from __future__ import annotations
@@ -49,23 +59,93 @@ def cosine_topk(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
     return s, i
 
 
-class VectorIndex:
-    """Materialised embedding index over a column of texts."""
+def active_mesh():
+    """The physical mesh of an enclosing ``with mesh:`` block, or None.
 
-    def __init__(self, vectors: np.ndarray):
+    A single-device mesh is reported as None — sharding the corpus over
+    one device only adds dispatch overhead."""
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if mesh is None or mesh.empty or mesh.size <= 1:
+        return None
+    return mesh
+
+
+class VectorIndex:
+    """Materialised embedding index over a column of texts.
+
+    ``topk`` scans single-device by default; with a mesh active (or
+    passed explicitly) the scan shards the corpus rows over the mesh via
+    ``distributed.sharded_topk``."""
+
+    def __init__(self, vectors: np.ndarray, mesh=None):
         v = np.asarray(vectors, np.float32)
         norms = np.maximum(np.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
         self.vectors = v / norms
+        self.mesh = mesh
         self._topk = jax.jit(cosine_topk, static_argnames=("k", "block"))
+        self._sharded = {}          # k -> bound sharded scan
 
     @classmethod
-    def build(cls, ctx, model_spec, texts: Sequence[str]) -> "VectorIndex":
+    def build(cls, ctx, model_spec, texts: Sequence[str],
+              mesh=None) -> "VectorIndex":
         from repro.core.functions import llm_embedding
-        return cls(llm_embedding(ctx, model_spec, list(texts)))
+        return cls(llm_embedding(ctx, model_spec, list(texts)), mesh=mesh)
+
+    def _sharded_topk(self, mesh, k: int):
+        from .distributed import make_sharded_topk
+        key = (id(mesh), k)
+        fn = self._sharded.get(key)
+        if fn is None:
+            fn = self._sharded[key] = make_sharded_topk(mesh, k)
+        return fn
 
     def topk(self, query_vecs: np.ndarray, k: int = 100):
         q = np.atleast_2d(np.asarray(query_vecs, np.float32))
-        use_pallas_k = min(k, len(self.vectors))
-        s, i = self._topk(jnp.asarray(self.vectors), jnp.asarray(q),
-                          use_pallas_k)
+        use_k = min(k, len(self.vectors))
+        mesh = self.mesh if self.mesh is not None else active_mesh()
+        if mesh is not None:
+            fn = self._sharded_topk(mesh, use_k)
+            s, i = fn(jnp.asarray(self.vectors), jnp.asarray(q))
+        else:
+            s, i = self._topk(jnp.asarray(self.vectors), jnp.asarray(q),
+                              use_k)
         return np.asarray(s), np.asarray(i)
+
+
+def ensure_index(ctx, model_spec, texts: Sequence[str],
+                 fingerprint: Optional[str] = None):
+    """Build-or-fetch the vector index for (embedding model, corpus).
+
+    Lookup order: the context's session registry, then the persistent
+    ``IndexStore`` sidecar, then a fresh ``llm_embedding`` build (which
+    populates both).  Returns ``(index, source)`` with source one of
+    ``"session"`` / ``"store"`` / ``"built"`` — the dedupe path behind
+    the optimizer's shared-corpus cost estimate."""
+    from repro.core.cache import corpus_fingerprint
+    from repro.core.functions import llm_embedding
+
+    texts = list(texts)
+    model = ctx.resolve_model(model_spec)
+    if fingerprint is None:
+        fingerprint = corpus_fingerprint(texts)
+    key = (model.ref, fingerprint)
+    index = ctx.lookup_index(key)
+    if index is not None:
+        return index, "session"
+    store = getattr(ctx, "index_store", None)
+    if store is not None:
+        vectors = store.get(model.ref, fingerprint)
+        if vectors is not None and len(vectors) == len(texts):
+            index = VectorIndex(vectors)
+            ctx.store_index(key, index)
+            return index, "store"
+    vectors = llm_embedding(ctx, model_spec, texts)
+    index = VectorIndex(vectors)
+    ctx.store_index(key, index)
+    if store is not None:
+        store.put(model.ref, fingerprint, vectors)
+    return index, "built"

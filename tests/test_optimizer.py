@@ -438,13 +438,14 @@ def test_execute_serial_single_tuple_overflow_is_null():
     assert stats.nulls == 1
 
 
-def test_run_adaptive_alias_is_deprecated_but_works():
-    from repro.core import run_adaptive
-
-    with pytest.warns(DeprecationWarning, match="execute_serial"):
-        results, stats = run_adaptive([0, 1], [1, 1], prefix_tokens=0,
-                                      context_window=10_000,
-                                      max_output_tokens=1,
-                                      call=lambda b: [f"v{i}" for i in b])
+def test_run_adaptive_alias_removed():
+    # the PR 3 deprecation ran its course: the compat alias is gone and
+    # the executor lives only in scheduler.execute_serial
+    from repro.core import batching
+    assert not hasattr(batching, "run_adaptive")
+    results, stats = execute_serial([0, 1], [1, 1], prefix_tokens=0,
+                                    context_window=10_000,
+                                    max_output_tokens=1,
+                                    call=lambda b: [f"v{i}" for i in b])
     assert results == ["v0", "v1"]
     assert stats.requests == 1
