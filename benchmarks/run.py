@@ -19,13 +19,15 @@ reproduced here:
     estimate within tolerance of measured; emits BENCH_speculative.json)
   * cross-node batch co-packing -> bench_copack (two map nodes sharing
     a metaprompt prefix: part-filled tail batches merge, mean batch
-    fill strictly higher / requests strictly lower, bit-identical rows;
+    fill strictly higher / requests strictly lower, bit-identical rows,
+    packed wall-clock <= unpacked (deadline-aware last-tail-out flush);
     plus the calibration-aware headroom loop: observed overflow retries
     shrink the next session's planned batches; emits BENCH_copack.json)
   * first-class retrieval operators -> bench_rag (two-query hybrid
     plan: fewer embed requests from co-packing + IndexStore reuse,
     rows bit-identical to the imperative composition, retrieval cost
-    in explain(); emits BENCH_rag.json)
+    in explain(), packed session wall-clock <= isolated sessions;
+    emits BENCH_rag.json)
   * Query 3 hybrid search -> bench_hybrid_search
   * serving engine -> bench_continuous_batching
   * kernels -> bench_kernel_* (interpret-mode correctness-path timing; the
@@ -468,6 +470,16 @@ def bench_copack():
         "explain() must report a packed request estimate below the " \
         "unpacked one"
     assert "packed_req=" in explain_text
+    assert "Objectives:" in explain_text and "latency:" in explain_text \
+        and "cost:" in explain_text, \
+        "explain() must report both objective frontiers"
+
+    # the packed path must also be the fast path: last-tail-out flushes
+    # make co-packing free on wall-clock (tolerance for runner noise)
+    wall_tol = float(os.environ.get("BENCH_COPACK_WALL_TOL", "1.10"))
+    assert on["wall_s"] <= off["wall_s"] * wall_tol, \
+        f"co-packing regressed wall-clock: {on['wall_s']:.3f}s packed " \
+        f"vs {off['wall_s']:.3f}s unpacked (tolerance {wall_tol}x)"
 
     # calibration-aware headroom: overflow retries feed back into the
     # planner as a smaller budget the NEXT session
@@ -493,6 +505,8 @@ def bench_copack():
         "copack_off": {k: v for k, v in off.items() if k != "rows"},
         "copack_on": {k: v for k, v in on.items() if k != "rows"},
         "packed_request_estimate": packed_est,
+        "wall_packed_s": round(on["wall_s"], 4),
+        "wall_unpacked_s": round(off["wall_s"], 4),
         "headroom": {"session1_retries": retries[0],
                      "session2_retries": retries[1]},
     }
@@ -620,6 +634,15 @@ def bench_rag():
     assert "packed_req=" in explain_text
     assert "scan_flops=" in explain_text
     assert scan_est > 0
+    assert "Objectives:" in explain_text, \
+        "explain() must report both objective frontiers"
+
+    # latency contract: the packed session (co-packing + index reuse)
+    # must not be slower than the isolated per-query sessions
+    wall_tol = float(os.environ.get("BENCH_RAG_WALL_TOL", "1.10"))
+    assert dt_on <= dt_off * wall_tol, \
+        f"packed RAG session regressed wall-clock: {dt_on:.3f}s packed " \
+        f"vs {dt_off:.3f}s unpacked (tolerance {wall_tol}x)"
 
     # imperative composition (the pre-PR idiom): same rows, bit for bit
     ictx = SemanticContext(provider=MockProvider(), enable_cache=False)
@@ -656,6 +679,8 @@ def bench_rag():
         "unpacked_request_estimate": est_requests,
         "scan_flops_estimate": scan_est,
         "wall_s_off": round(dt_off, 4), "wall_s_on": round(dt_on, 4),
+        "wall_packed_s": round(dt_on, 4),
+        "wall_unpacked_s": round(dt_off, 4),
     }
     out_path = Path(__file__).resolve().parent / "BENCH_rag.json"
     out_path.write_text(json.dumps(results, indent=1))

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 import threading
 from collections import OrderedDict
 from pathlib import Path
@@ -431,10 +432,7 @@ class CalibrationStore:
             v = rec.get(k)
             if not isinstance(v, int) or v < 0:
                 return False
-        lat = rec.get("latency_s")
-        return (isinstance(lat, list)
-                and all(isinstance(x, (int, float)) and x >= 0
-                        for x in lat))
+        return isinstance(rec.get("latency_s"), list)
 
     def load(self) -> dict[str, dict]:
         if not self.path.exists():
@@ -447,13 +445,18 @@ class CalibrationStore:
             return {}
         out: dict[str, dict] = {}
         for ref, rec in data.get("models", {}).items():
-            if self._valid(rec):
-                out[ref] = {"requests": rec["requests"],
-                            "retries": rec["retries"],
-                            "tuples": rec["tuples"],
-                            "latency_s": [float(x) for x in
-                                          rec["latency_s"]
-                                          [-CALIBRATION_WINDOW:]]}
+            if not self._valid(rec):
+                continue
+            # self-heal: sidecars written before the monotonic-clock fix
+            # may carry negative latencies (wall-clock stepped backwards
+            # mid-request) — drop the bad samples, keep the record
+            lat = [float(x) for x in rec["latency_s"]
+                   if isinstance(x, (int, float)) and not isinstance(x, bool)
+                   and math.isfinite(x) and x >= 0]
+            out[ref] = {"requests": rec["requests"],
+                        "retries": rec["retries"],
+                        "tuples": rec["tuples"],
+                        "latency_s": lat[-CALIBRATION_WINDOW:]}
         return out
 
     def save(self, stats: dict[str, dict]):

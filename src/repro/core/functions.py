@@ -49,7 +49,8 @@ from .metaprompt import (build_metaprompt, build_multi_task, build_prefix,
                          serialize_tuple)
 from .provider import BaseProvider, MockProvider, estimate_tokens
 from .resources import Catalog, ModelResource
-from .scheduler import RequestScheduler, execute_serial
+from .scheduler import (PACK_LINGER_LATENCY_FRACTION, PACK_LINGER_MIN_S,
+                        RequestScheduler, execute_serial)
 
 
 @dataclass
@@ -88,7 +89,8 @@ class SemanticContext:
                  speculate=False, speculate_waste_cap: float = 1.0,
                  calibration_path: Optional[str] = None,
                  copack: bool = True,
-                 index_path: Optional[str] = None):
+                 index_path: Optional[str] = None,
+                 objective: str = "latency"):
         self.catalog = catalog or Catalog()
         self.provider = provider or MockProvider()
         self.cache = cache or PredictionCache()
@@ -114,6 +116,16 @@ class SemanticContext:
         # copack=False is the escape hatch (results are bit-identical
         # either way; only request density changes).
         self.copack = copack
+        # scheduling objective: "latency" flushes a parked co-pack the
+        # moment no rider is plausibly in flight and bounds the linger
+        # by the calibrated expected-arrival window; "cost" keeps the
+        # full configured linger window (the density dial) and ranks
+        # plans by token/request spend alone.  The optimizer prices
+        # both frontiers either way (explain() shows them).
+        if objective not in ("latency", "cost"):
+            raise ValueError("objective must be 'latency' or 'cost', "
+                             f"got {objective!r}")
+        self.objective = objective
         # prefix identities currently eligible for co-packing: managed
         # by Pipeline._run_group (only node groups that actually contain
         # >= 2 same-prefix nodes pay the packing-queue linger)
@@ -202,22 +214,69 @@ class SemanticContext:
         return getattr(self._tl, "last_report_slot", None)
 
     # ---- co-packing eligibility (managed by Pipeline._run_group) -----------
+    @staticmethod
+    def _copack_counts(identities) -> Dict[Any, int]:
+        """Normalise a co-pack group spec — a ``{identity: expected
+        submitter count}`` mapping or a plain iterable (one submitter
+        per occurrence) — into a count dict."""
+        if isinstance(identities, dict):
+            return {i: int(n) for i, n in identities.items() if n > 0}
+        counts: Dict[Any, int] = {}
+        for ident in identities:
+            counts[ident] = counts.get(ident, 0) + 1
+        return counts
+
+    @staticmethod
+    def _pack_queue_key(identity):
+        # the scheduler keys its packing queue (and rider-expectation
+        # registry) by (model.ref, identity); identity[1] is the fully-
+        # resolved ModelResource in every pack identity we mint
+        return (identity[1].ref, identity)
+
     def copack_begin(self, identities):
         """Mark prefix identities as co-packable for the duration of a
-        concurrent node-group dispatch (re-entrant: counted)."""
+        concurrent node-group dispatch (re-entrant: counted).
+
+        ``identities`` maps each identity to the number of submitters
+        the group expects to dispatch under it (an iterable counts one
+        per occurrence).  The counts are registered with the scheduler
+        as outstanding rider expectations, so a parked pack flushes the
+        moment its LAST expected tail arrives instead of waiting out
+        the linger deadline."""
+        counts = self._copack_counts(identities)
         with self._lock:
-            for ident in identities:
+            for ident in counts:
                 self._copack_active[ident] = \
                     self._copack_active.get(ident, 0) + 1
+        if self.scheduler is not None:
+            for ident, n in counts.items():
+                self.scheduler.pack_expect(self._pack_queue_key(ident), n)
 
     def copack_end(self, identities):
+        """Close a co-pack group: drop eligibility and retire whatever
+        rider expectations the group never delivered (members that
+        resolved entirely from cache, raised, ...).  Retiring flushes
+        packs still parked under a newly-riderless identity — a lone
+        surviving tail must not wait out a window no partner can ever
+        fill."""
+        counts = self._copack_counts(identities)
         with self._lock:
-            for ident in identities:
+            for ident in counts:
                 n = self._copack_active.get(ident, 0) - 1
                 if n <= 0:
                     self._copack_active.pop(ident, None)
                 else:
                     self._copack_active[ident] = n
+        if self.scheduler is not None:
+            for ident, n in counts.items():
+                self.scheduler.pack_retire(self._pack_queue_key(ident), n)
+
+    def copack_skip(self, identity):
+        """Signal that one expected co-pack submitter resolved WITHOUT
+        dispatching (all rows deduped/cached): riders parked on the
+        identity must not keep waiting for a tail that never comes."""
+        if self.scheduler is not None and self.copack_eligible(identity):
+            self.scheduler.pack_arrived(self._pack_queue_key(identity))
 
     def copack_eligible(self, identity) -> bool:
         if not (self.copack and self.scheduler is not None
@@ -225,6 +284,22 @@ class SemanticContext:
             return False
         with self._lock:
             return identity in self._copack_active
+
+    def copack_linger(self, model_ref: str) -> Optional[float]:
+        """Calibrated expected-arrival window for a parked tail batch:
+        under the latency objective, a fraction of the model's observed
+        p50 request latency (floored at ``PACK_LINGER_MIN_S``, capped by
+        the scheduler's configured ``pack_linger_s``).  None — meaning
+        the scheduler's fixed window governs — when uncalibrated or
+        when the session optimizes for cost (the density dial)."""
+        if self.scheduler is None or self.objective != "latency":
+            return None
+        lat = self.calibrated_latency(model_ref, 50.0)
+        if lat is None:
+            return None
+        return min(self.scheduler.pack_linger_s,
+                   max(PACK_LINGER_MIN_S,
+                       PACK_LINGER_LATENCY_FRACTION * lat))
 
     # ---- vector-index registry (retrieval plan operators) ------------------
     def lookup_index(self, key):
@@ -503,7 +578,8 @@ def _dispatch_stage(ctx: SemanticContext, model: ModelResource,
         pack_kw = {}
         if pack_key is not None and ctx.copack_eligible(pack_key):
             pack_kw = dict(pack_key=pack_key, pack_rows=pack_rows,
-                           pack_call=pack_call)
+                           pack_call=pack_call,
+                           pack_linger=ctx.copack_linger(model.ref))
         job = ctx.scheduler.submit_map(
             model, [keys[i] for i in todo], costs, prefix_tokens, call,
             cache=ctx.cache if ctx.enable_cache else None,
@@ -578,6 +654,12 @@ def _map_core(ctx: SemanticContext, kind: str, model: ModelResource,
                               pack_rows=pack_rows, pack_call=pack_call)
         for j, i in enumerate(todo):
             results[i] = out[j]
+    elif ctx.scheduler is not None:
+        # nothing to dispatch (all cached/deduped) still counts as this
+        # submitter's arrival: a rider parked on the shared identity
+        # must not wait out its deadline for a tail that never comes
+        ctx.copack_skip((id(ctx.provider), model, kind,
+                         ctx.serialization, prompt_text))
 
     return [results[b] for b in back]
 
@@ -742,7 +824,8 @@ def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
                         "rows": [order[i] for i in todo],
                         "call": pack_call,
                         "budget": int(window * headroom),
-                        "max_batch": mb, "weights": costs}
+                        "max_batch": mb, "weights": costs,
+                        "linger_s": ctx.copack_linger(model.ref)}
             job = ctx.scheduler.submit(
                 model, [keys[i] for i in todo], run,
                 cache=ctx.cache if ctx.enable_cache else None,
@@ -765,6 +848,10 @@ def llm_embedding(ctx, model_spec, tuples) -> np.ndarray:
                                sum(stats.batch_sizes), stats.latencies)
         for j, i in enumerate(todo):
             vecs[i] = out[j]
+    elif ctx.scheduler is not None:
+        # fully cache-served embed dispatch: still signal arrival so a
+        # rider parked on the shared embedding identity flushes now
+        ctx.copack_skip(embedding_pack_key(ctx, model))
     return np.asarray([vecs[b] for b in back], np.float32)
 
 

@@ -165,7 +165,7 @@ class MockProvider(BaseProvider):
         rows = [ln for ln in mp.suffix.splitlines()
                 if ln and not ln.startswith("#")][:n_rows]
         rows += [""] * (n_rows - len(rows))
-        t0 = time.time()
+        t0 = time.monotonic()
         out = None
         if self.behaviour is not None:
             out = self.behaviour(mp.function, mp.prefix, rows)
@@ -178,7 +178,7 @@ class MockProvider(BaseProvider):
             time.sleep(min(sim, 1.0))
         self.stats.add(calls=1, prompt_tokens=estimate_tokens(mp.text),
                        output_tokens=sum(estimate_tokens(o) for o in out),
-                       latency_s=time.time() - t0)
+                       latency_s=time.monotonic() - t0)
         return out
 
     def embed(self, model, texts):
@@ -226,7 +226,7 @@ class LocalJaxProvider(BaseProvider):
 
     def complete(self, model, mp, n_rows):
         self._check_context(model, mp, n_rows)
-        t0 = time.time()
+        t0 = time.monotonic()
         vocab = self.engine.cfg.vocab_size
         prompt = self._tokenize(mp.text, vocab)
         max_new = min(model.max_output_tokens * max(n_rows, 1), 64)
@@ -235,7 +235,7 @@ class LocalJaxProvider(BaseProvider):
         text = self._detokenize(toks)
         self.stats.add(calls=1, prompt_tokens=len(prompt),
                        output_tokens=len(toks),
-                       latency_s=time.time() - t0)
+                       latency_s=time.monotonic() - t0)
         # random weights produce uninterpretable bytes; wrap them in the
         # contract shape so downstream parsing stays exercised end-to-end
         return [f"{i}: {text[:32]!r}" for i in range(n_rows)] \

@@ -26,10 +26,22 @@ Pieces:
     dispatching it immediately; tails from different jobs that share
     the prefix merge into one provider request (results demultiplexed
     back to each owning job), so the context window stays dense when
-    many plan nodes dispatch concurrently.  A parked tail with no
-    partner flushes after ``pack_linger_s`` and executes exactly as it
-    would have unpacked; per-tuple results are independent of batch
-    composition, so merged execution is bit-identical to unpacked.
+    many plan nodes dispatch concurrently.  The queue is LATENCY-FIRST:
+    callers register how many same-identity submitters are in flight
+    (``pack_expect``/``pack_retire``, driven by the context's
+    ``copack_begin``/``copack_end`` refcounts), every arriving
+    submitter decrements the expectation, and the pack flushes the
+    moment the LAST expected tail lands (or the identity retires) —
+    merging costs no wall-clock when all riders show up.  A parked
+    segment is additionally bounded by a per-pack deadline: the
+    calibrated expected-arrival window (``pack["linger_s"]``, derived
+    from the model's observed request latency) when known, the
+    configured ``pack_linger_s`` cap otherwise — so no tail is ever
+    older than the window before dispatching exactly as it would have
+    unpacked.  Overflow-split remainders re-enter the same queue when
+    a mergeable partner is still plausible.  Per-tuple results are
+    independent of batch composition, so merged execution is
+    bit-identical to unpacked.
   * ``SpeculativeMaskJoin`` — the mask-join dispatch group behind the
     optimizer's speculative filter chains: fans every ``llm_filter``
     chain member out over the chain's input stream concurrently and
@@ -179,6 +191,16 @@ class _ModelGate:
 _PACK_FILL_MAX = 0.85
 _PACK_FLUSH_FILL = 0.9
 
+# deadline policy for parked tails: with calibration data a rider is
+# expected within ~one request service time (concurrently-dispatched
+# group members start together), so the expected-arrival window is a
+# fraction of the model's observed p50 request latency — floored so
+# timer granularity cannot starve a real rider, and always capped by
+# the scheduler's configured ``pack_linger_s`` (the uncalibrated
+# fallback and hard upper bound)
+PACK_LINGER_LATENCY_FRACTION = 0.5
+PACK_LINGER_MIN_S = 0.002
+
 
 class _PackSegment:
     """One job's parked tail batch inside a pending co-pack."""
@@ -193,10 +215,12 @@ class _PackSegment:
 
 class _PendingPack:
     """A short-lived per-(model, prefix) packing-queue entry: part-filled
-    tail batches accumulate here until the merged batch is dense enough
-    or the linger window expires."""
+    tail batches accumulate here until the merged batch is dense enough,
+    the last expected same-identity rider arrives, or the per-pack
+    deadline expires.  ``deadline`` is fixed at creation (merging never
+    extends it), so no parked segment is ever older than one window."""
     __slots__ = ("key", "model", "budget", "max_batch", "call",
-                 "segments", "tokens", "flushed", "timer")
+                 "segments", "tokens", "flushed", "timer", "deadline")
 
     def __init__(self, key, model, budget, max_batch, call, segment):
         self.key = key
@@ -208,6 +232,7 @@ class _PendingPack:
         self.tokens = segment.weight
         self.flushed = False
         self.timer: Optional[threading.Timer] = None
+        self.deadline: float = 0.0      # monotonic flush-by time
 
     def size(self) -> int:
         return sum(len(s.positions) for s in self.segments)
@@ -223,6 +248,8 @@ class SchedulerStats:
     max_inflight: int = 0       # peak concurrently-executing requests
     packed_requests: int = 0    # merged (co-packed) provider requests
     packed_batches: int = 0     # tail batches folded into merged requests
+    repacked_tails: int = 0     # overflow-split remainders re-queued
+    #                             into the packing queue
 
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
@@ -249,6 +276,7 @@ class DispatchJob:
         self.run = run
         self.model = model
         self.cache = cache
+        self.pack: Optional[dict] = None    # co-pack opts (set by submit)
         self.values: List = [None] * len(self.keys)
         self.stats = BatchStats()
         self.coalesced = 0      # keys served by another job's request
@@ -329,6 +357,13 @@ class RequestScheduler:
         self._inflight: Dict[str, _InflightEntry] = {}
         self._gates: Dict[str, _ModelGate] = {}
         self._packs: Dict[tuple, _PendingPack] = {}
+        # rider-expectation registry: pack key -> outstanding same-
+        # identity submitters announced via pack_expect().  Every
+        # arriving submitter decrements; at zero no mergeable rider can
+        # be in flight, so the parked pack flushes immediately (last-
+        # tail-out).  Keys never registered stay in "unknown" mode and
+        # fall back to pure deadline-based lingering.
+        self._pack_expected: Dict[tuple, int] = {}
         self._pack_lock = threading.Lock()
         self._executing = 0
         self.stats = SchedulerStats()
@@ -451,6 +486,7 @@ class RequestScheduler:
                              for b in (batches or [])]
             owned_batches = [b for b in owned_batches if b]
         parked: Optional[List[int]] = None
+        job.pack = pack         # kept for overflow-remainder repacking
         if pack is not None and owned_batches:
             tail = owned_batches[-1]
             tail_w = sum(pack["weights"][p] for p in tail)
@@ -458,6 +494,11 @@ class RequestScheduler:
                 parked = tail
                 owned_batches = owned_batches[:-1]
         if not owned_batches and parked is None:
+            # this submitter arrived with nothing to park (all coalesced
+            # / cached, or a too-full tail of zero batches): riders
+            # parked on the identity must not keep waiting for it
+            if pack is not None:
+                self.pack_arrived((model.ref, pack["key"]))
             job._done.set()
             return job
         job._batch_started(len(owned_batches) + (parked is not None))
@@ -472,6 +513,9 @@ class RequestScheduler:
             raise
         if parked is not None:
             self._register_pack(job, parked, pack)
+        elif pack is not None:
+            # dispatched everything as full batches: still an arrival
+            self.pack_arrived((model.ref, pack["key"]))
         return job
 
     def submit_map(self, model: ModelResource, keys: Sequence[str],
@@ -482,7 +526,8 @@ class RequestScheduler:
                    single_flight: bool = True, headroom: float = 1.0,
                    pack_key=None,
                    pack_rows: Optional[Sequence] = None,
-                   pack_call: Optional[Callable[[list], list]] = None
+                   pack_call: Optional[Callable[[list], list]] = None,
+                   pack_linger: Optional[float] = None
                    ) -> DispatchJob:
         """Dispatch with context-window batch planning that runs AFTER
         single-flight coalescing, so the positions this job actually
@@ -495,7 +540,10 @@ class RequestScheduler:
         is the metaprompt-prefix identity shared by co-packable jobs,
         ``pack_rows[p]`` the provider payload for position ``p``, and
         ``pack_call(rows)`` one provider request over rows drawn from
-        any number of same-prefix jobs."""
+        any number of same-prefix jobs.  ``pack_linger`` overrides the
+        scheduler's default deadline for a tail parked by THIS job —
+        the calibrated expected-arrival window — and never exceeds it
+        in practice (callers clamp to ``pack_linger_s``)."""
         window = (context_window if context_window is not None
                   else model.context_window)
 
@@ -514,6 +562,7 @@ class RequestScheduler:
                 pack = {"key": pack_key, "rows": pack_rows,
                         "call": pack_call, "budget": budget,
                         "max_batch": max_batch,
+                        "linger_s": pack_linger,
                         "weights": [c + model.max_output_tokens
                                     for c in token_costs]}
         return self.submit(model, keys, run, cache=cache,
@@ -521,19 +570,93 @@ class RequestScheduler:
                            pack=pack)
 
     # ---- co-packing stage --------------------------------------------------
+    def pack_expect(self, key, n: int = 1):
+        """Announce ``n`` same-identity submitters about to dispatch
+        under pack ``key`` (``(model.ref, identity)``).  Driven by the
+        context's ``copack_begin``: while the expectation is positive a
+        parked pack lingers for its riders; once every expected
+        submitter has arrived it flushes immediately."""
+        if n <= 0:
+            return
+        with self._pack_lock:
+            self._pack_expected[key] = self._pack_expected.get(key, 0) + n
+
+    def pack_arrived(self, key):
+        """One expected submitter has dispatched (or resolved with
+        nothing to send).  When it was the last one, no mergeable rider
+        can still be in flight — flush any pack parked under the key."""
+        to_flush = None
+        with self._pack_lock:
+            if self._pack_note_arrival_locked(key) is True:
+                to_flush = self._packs.get(key)
+        if to_flush is not None:
+            self._flush_pack(to_flush)
+
+    def pack_retire(self, key, n: int = 1):
+        """Withdraw up to ``n`` outstanding expectations (the group
+        closed; some registered submitters never dispatched).  An
+        identity with no expectations left cannot receive a rider, so a
+        pack still parked under it flushes immediately instead of
+        waiting out its deadline."""
+        to_flush = None
+        with self._pack_lock:
+            cur = self._pack_expected.get(key)
+            if cur is not None:
+                cur -= n
+                if cur > 0:
+                    self._pack_expected[key] = cur
+                else:
+                    self._pack_expected.pop(key, None)
+                    cur = 0
+            if not cur:
+                to_flush = self._packs.get(key)
+        if to_flush is not None:
+            self._flush_pack(to_flush)
+
+    def _pack_note_arrival_locked(self, key) -> Optional[bool]:
+        """Decrement the rider expectation for ``key`` (caller holds
+        ``_pack_lock``).  True = that was the last expected submitter;
+        False = riders still outstanding; None = key never registered
+        (unknown mode: deadline-based lingering governs)."""
+        n = self._pack_expected.get(key)
+        if n is None:
+            return None
+        n -= 1
+        if n <= 0:
+            self._pack_expected.pop(key, None)
+            return True
+        self._pack_expected[key] = n
+        return False
+
     def _register_pack(self, job: DispatchJob, positions: List[int],
-                       pack: dict):
+                       pack: dict, arrival: bool = True,
+                       opportunistic: bool = False) -> bool:
         """Park a part-filled tail batch in the per-(model, prefix)
         packing queue.  Merges into an already-parked compatible entry
         when the combined batch fits the budget; flushes immediately
-        once the merged batch is dense enough, otherwise the linger
-        timer dispatches whatever accumulated."""
+        once the merged batch is dense enough OR the last expected
+        same-identity submitter has arrived (last-tail-out), otherwise
+        the per-pack deadline timer dispatches whatever accumulated.
+
+        ``arrival=False`` registers without consuming a rider
+        expectation (overflow-split remainders: their job already
+        arrived at submit time).  ``opportunistic=True`` refuses to
+        park — returns False — unless a pending pack or outstanding
+        expectation makes a merge plausible, so a remainder with no
+        conceivable partner requeues as a plain batch instead of
+        idling until the deadline."""
         seg = _PackSegment(job, positions,
                            [pack["rows"][p] for p in positions],
                            sum(pack["weights"][p] for p in positions))
         key = (job.model.ref, pack["key"])
-        to_flush = None
+        flushes: List[_PendingPack] = []
         with self._pack_lock:
+            if opportunistic and (key not in self._packs
+                                  and self._pack_expected.get(key, 0)
+                                  <= 0):
+                return False
+            last = (self._pack_note_arrival_locked(key) if arrival
+                    else None)
             pending = self._packs.get(key)
             if pending is not None:
                 fits = (pending.tokens + seg.weight
@@ -550,23 +673,50 @@ class RequestScheduler:
                                               or pack["max_batch"]
                                               < pending.max_batch):
                         pending.max_batch = pack["max_batch"]
-                    if self._pack_is_full(pending):
-                        to_flush = pending
+                    if self._pack_is_full(pending) or last is True:
+                        flushes.append(pending)
                     pending = seg = None
                 else:
-                    to_flush = pending      # full: dispatch, repark fresh
+                    flushes.append(pending)  # full: dispatch, repark
                     pending = None
             if seg is not None and pending is None:
                 pending = _PendingPack(key, job.model, pack["budget"],
                                        pack["max_batch"], pack["call"],
                                        seg)
-                self._packs[key] = pending
-                pending.timer = threading.Timer(
-                    self.pack_linger_s, self._flush_pack, (pending,))
-                pending.timer.daemon = True
-                pending.timer.start()
-        if to_flush is not None:
-            self._flush_pack(to_flush)
+                linger = float(pack.get("linger_s")
+                               or self.pack_linger_s)
+                pending.deadline = time.monotonic() + linger
+                if last is True:
+                    # the last expected submitter has no one to wait
+                    # for: dispatch its lone tail without parking
+                    flushes.append(pending)
+                else:
+                    self._packs[key] = pending
+                    pending.timer = threading.Timer(
+                        linger, self._flush_pack, (pending,))
+                    pending.timer.daemon = True
+                    pending.timer.start()
+        for p in flushes:
+            self._flush_pack(p)
+        return True
+
+    def _maybe_repack(self, job: DispatchJob,
+                      positions: List[int]) -> bool:
+        """Route an overflow-split remainder back into the packing
+        queue when its job co-packs and a mergeable partner is still
+        plausible (pending pack or outstanding rider expectation).
+        Returns False — caller requeues as a plain batch — otherwise."""
+        pack = job.pack
+        if not pack or pack.get("budget", 0) <= 0:
+            return False
+        weight = sum(pack["weights"][p] for p in positions)
+        if weight > _PACK_FILL_MAX * pack["budget"]:
+            return False
+        if not self._register_pack(job, positions, pack, arrival=False,
+                                   opportunistic=True):
+            return False
+        self.stats.add(repacked_tails=1)
+        return True
 
     @staticmethod
     def _pack_is_full(pending: _PendingPack) -> bool:
@@ -717,7 +867,11 @@ class RequestScheduler:
             head, tail = split_batch(batch)
             job._batch_started(1)        # one batch became two
             self._pool.submit(self._run_batch, job, head)
-            self._pool.submit(self._run_batch, job, tail)
+            # the shrunken remainder is exactly a part-filled tail: let
+            # it ride a pending same-identity pack when one is plausible
+            # instead of paying a sparse request of its own
+            if not self._maybe_repack(job, tail):
+                self._pool.submit(self._run_batch, job, tail)
             return
         finally:
             with self._lock:

@@ -131,7 +131,15 @@ class PlanCost:
     (vector scan ~ 2*N*D per query, BM25 postings scan ~ N per query,
     fusion ~ N per query) — provider-free work, reported separately so
     ``explain()`` shows a RAG plan's full retrieval cost next to its
-    embed requests."""
+    embed requests.
+
+    ``pack_wait_s`` is the worst-case co-pack linger spend: one full
+    configured linger window per dispatch group with packed savings.
+    Under the latency objective the scheduler's last-tail-out flush
+    makes this ~0 on the critical path (riders arrive together); under
+    the cost objective the plan may actually pay it — the two
+    ``est_wall`` frontiers ``explain()`` reports differ by exactly this
+    term."""
     requests: int = 0
     tokens: int = 0
     rows_into_llm: int = 0      # tuples fed to semantic ops, post-dedup-free
@@ -140,6 +148,7 @@ class PlanCost:
     wasted_requests: int = 0    # expected speculative-request overshoot
     packed_requests: int = 0    # request estimate with tail co-packing
     scan_flops: float = 0.0     # retrieval index-scan cost (non-provider)
+    pack_wait_s: float = 0.0    # worst-case co-pack linger (cost frontier)
 
     def __str__(self):
         s = (f"requests={self.requests} tokens={self.tokens} "
@@ -198,6 +207,11 @@ class OptimizedPlan:
     optimized_node_costs: List[dict] = field(default_factory=list)
     # one entry per llm_filter chain considered for speculation
     spec_decisions: List[SpeculationDecision] = field(default_factory=list)
+    # the objective the rewrite gates ranked under, and both scheduling
+    # frontiers of the optimized plan: {"latency"|"cost": {"packed_req",
+    # "est_wall"}} with est_wall None when uncalibrated
+    objective: str = "latency"
+    frontiers: dict = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -527,8 +541,13 @@ def _packed_savings(ctx: SemanticContext, source: Table, group,
         if len(members) < 2:
             continue
         model = ctx.resolve_model(members[0].info["model"])
-        kind = ident[2]         # (provider, model.ref, kind, ser, text)
-        prompt_text, _ = _node_prompt_text(ctx, members[0])
+        kind = ident[2]         # (provider, model, kind, ser, text)
+        if members[0].op == "llm_fused":
+            # fused nodes carry sub-task prompt specs, not a single
+            # prompt: the shared prefix is the rendered multi-task text
+            prompt_text = _fused_prompt_text(ctx, members[0])
+        else:
+            prompt_text, _ = _node_prompt_text(ctx, members[0])
         prefix_tokens = estimate_tokens(
             build_prefix(kind, prompt_text, ctx.serialization))
         headroom = ctx.batch_headroom(model.ref)
@@ -562,6 +581,11 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
     rows = float(len(source))
     seen_corpus: set = set()      # shared-corpus embed dedupe across nodes
     node_packed_saved = 0
+    # worst-case linger a co-packing site may spend waiting for denser
+    # merges (the cost objective's density dial; ~0 under latency-first
+    # last-tail-out scheduling): one window per site with packed savings
+    linger_s = (ctx.scheduler.pack_linger_s
+                if getattr(ctx, "scheduler", None) is not None else 0.0)
     for node in nodes:
         entry_rows[id(node)] = rows
         rows, c = estimate_node_cost(ctx, node, rows, source, seen_corpus)
@@ -576,6 +600,7 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
         total.scan_flops += c.scan_flops
         if c.packed_requests and c.packed_requests < c.requests:
             node_packed_saved += c.requests - c.packed_requests
+            total.pack_wait_s += linger_s
         ref, limit = "", 1
         if (c.requests and "model" in node.info
                 and (node.op in SEMANTIC_OPS or node.op in RETRIEVAL_OPS)):
@@ -596,9 +621,12 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
     packed_saved = 0
     for group in Pipeline._dispatch_groups(list(nodes)):
         if copack_on and len(group) > 1:
-            packed_saved += _packed_savings(
+            saved = _packed_savings(
                 ctx, source, group,
                 int(round(entry_rows.get(id(group[0]), 0.0))))
+            if saved:
+                packed_saved += saved
+                total.pack_wait_s += linger_s
         if len(group) == 1:
             ref, limit, reqs, w, nwall = node_info.get(
                 id(group[0]), ("", 1, 0, 0, 0.0))
@@ -1091,13 +1119,44 @@ def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
 # few hundred tokens of service time (benchmarks/run.py batching bench)
 REQUEST_OVERHEAD_TOKENS = 200
 
+# nominal per-request round-trip seconds for ranking plans on waves when
+# no calibrated latency exists (the same ~30 ms ballpark that motivates
+# REQUEST_OVERHEAD_TOKENS)
+NOMINAL_REQUEST_S = 0.03
 
-def _cost_rank(c: PlanCost) -> float:
-    return c.tokens + REQUEST_OVERHEAD_TOKENS * c.requests
+
+def _cost_rank(c: PlanCost, objective: str = "cost") -> tuple:
+    """Comparable plan rank under a scheduling objective.  ``cost``
+    ranks by token spend plus a flat per-request overhead (the provider
+    bill).  ``latency`` ranks by the calibrated wall estimate — waves x
+    a nominal round-trip when uncalibrated — with the token rank as the
+    tie-break, so among equally fast plans the cheaper one wins."""
+    base = float(c.tokens + REQUEST_OVERHEAD_TOKENS * c.requests)
+    if objective == "latency":
+        wall = c.wall_s if c.wall_s else c.waves * NOMINAL_REQUEST_S
+        return (wall, base)
+    return (base, 0.0)
+
+
+def _objective_frontiers(cost: PlanCost) -> dict:
+    """Both scheduling frontiers of one plan estimate.  The co-packed
+    request count is identical (last-tail-out makes packing free under
+    the latency objective, so neither frontier gives it up); the wall
+    estimates differ by the linger the cost objective may spend waiting
+    for denser merges.  ``est_wall`` is None when uncalibrated."""
+    packed = cost.packed_requests or cost.requests
+    wall = cost.wall_s if cost.wall_s else None
+    return {
+        "latency": {"packed_req": packed, "est_wall": wall},
+        "cost": {"packed_req": packed,
+                 "est_wall": (None if wall is None
+                              else wall + cost.pack_wait_s)},
+    }
 
 
 def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
-                  speculate=None) -> OptimizedPlan:
+                  speculate=None, objective: Optional[str] = None
+                  ) -> OptimizedPlan:
     """Rewrite a Pipeline node list; returns both plans' cost estimates.
 
     Pushdown always applies (it only ever shrinks the tuple stream LLM
@@ -1113,7 +1172,16 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
     concurrent mask-join node or kept serial, per the calibrated
     decision recorded in ``OptimizedPlan.spec_decisions``.
 
-    Pure planning: no provider calls, no table materialisation."""
+    ``objective`` (``"latency"``/``"cost"``, default the context's) sets
+    the rank the cost gates compare under: ``latency`` accepts a rewrite
+    that lowers the wall estimate even when it spends more tokens (e.g.
+    fusion collapsing two waves into one), ``cost`` keeps the token-first
+    gate.  Pure planning: no provider calls, no table materialisation."""
+    if objective is None:
+        objective = getattr(ctx, "objective", "latency")
+    if objective not in ("latency", "cost"):
+        raise ValueError(
+            f"objective must be 'latency' or 'cost', got {objective!r}")
     naive = [n for n in nodes]
     rewrites: List[str] = []
     new = _pushdown(list(nodes), rewrites)
@@ -1129,7 +1197,7 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
         if not trial_rw:
             continue
         trial_cost, _ = estimate_plan_cost(ctx, source, trial)
-        if _cost_rank(trial_cost) <= _cost_rank(cost):
+        if _cost_rank(trial_cost, objective) <= _cost_rank(cost, objective):
             new, cost = trial, trial_cost
             rewrites.extend(trial_rw)
         else:
@@ -1143,11 +1211,13 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
                                                 rewrites, mode)
 
     plan = OptimizedPlan(nodes=new, rewrites=rewrites,
-                         spec_decisions=spec_decisions)
+                         spec_decisions=spec_decisions,
+                         objective=objective)
     plan.naive_cost, plan.naive_node_costs = estimate_plan_cost(
         ctx, source, list(naive))
     plan.optimized_cost, plan.optimized_node_costs = estimate_plan_cost(
         ctx, source, new)
     plan.optimized_cost.wasted_requests = sum(
         d.wasted_requests for d in spec_decisions if d.chosen)
+    plan.frontiers = _objective_frontiers(plan.optimized_cost)
     return plan

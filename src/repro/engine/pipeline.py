@@ -86,10 +86,11 @@ from __future__ import annotations
 import re
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core import functions as F
 from repro.core.functions import SemanticContext
+from repro.core.metaprompt import build_multi_task
 
 from .table import Table
 
@@ -102,18 +103,24 @@ _PARALLEL_MAP_OPS = ("llm_complete", "llm_complete_json", "llm_embedding")
 # determined by (model, function kind, serialization, prompt text), so
 # two nodes agreeing on that tuple produce byte-identical static prefixes
 # and their rows can share one provider request.  Embedding dispatches
-# have no prompt at all, so they co-pack on the model alone.
+# have no prompt at all, so they co-pack on the model alone; fused
+# multi-output nodes co-pack on the full rendered multi-task prompt
+# (sub-task kinds AND texts, in order), so only structurally identical
+# fusions merge and the positional demux stays exact per sub-output.
 _COPACK_KINDS = {"llm_complete": "complete",
                  "llm_complete_json": "complete_json",
-                 "llm_embedding": "embedding"}
+                 "llm_embedding": "embedding",
+                 "llm_fused": "multi"}
 
 
 def copack_identity(ctx: SemanticContext, node: "PlanNode"):
     """Metaprompt-prefix identity of a map node, or ``None`` when the
     node cannot co-pack.  Must mirror the ``pack_key`` computed by
-    ``functions._map_core`` (and ``functions.embedding_pack_key`` for
-    embedding dispatches) — the scheduler's packing queue merges tail
-    batches exactly when these tuples compare equal."""
+    ``functions._map_core`` (``functions.llm_multi`` renders the same
+    multi-task prompt for fused nodes, and
+    ``functions.embedding_pack_key`` covers embedding dispatches) — the
+    scheduler's packing queue merges tail batches exactly when these
+    tuples compare equal."""
     kind = _COPACK_KINDS.get(node.op)
     if kind is None:
         return None
@@ -121,7 +128,12 @@ def copack_identity(ctx: SemanticContext, node: "PlanNode"):
         model = ctx.resolve_model(node.info["model"])
         if kind == "embedding":
             return F.embedding_pack_key(ctx, model)
-        text, _ = ctx.resolve_prompt(node.info["prompt"])
+        if kind == "multi":
+            text = build_multi_task(
+                node.info["kinds"],
+                [ctx.resolve_prompt(p)[0] for p in node.info["prompts"]])
+        else:
+            text, _ = ctx.resolve_prompt(node.info["prompt"])
     except KeyError:
         return None
     # the FULL resolved resource, not just name@version: inline specs
@@ -297,21 +309,24 @@ class Pipeline:
         return self._add("llm_rerank", fn, **info)
 
     # ---- execution -----------------------------------------------------------
-    def _plan(self, speculate=None):
-        """Run (and memoise, per ``speculate`` mode) the cost-based
-        rewrite for the current nodes."""
+    def _plan(self, speculate=None, objective=None):
+        """Run (and memoise, per ``(speculate, objective)`` mode) the
+        cost-based rewrite for the current nodes."""
         from .optimizer import optimize_plan
         if speculate is None:
             speculate = self.ctx.speculate
+        if objective is None:
+            objective = self.ctx.objective
         # True and "auto" produce identical plans — share one memo slot
         key = ("always" if speculate == "always"
-               else "auto" if speculate else False)
+               else "auto" if speculate else False, objective)
         plans = getattr(self, "_opt", None)
         if plans is None:
             plans = self._opt = {}
         if key not in plans:
             plans[key] = optimize_plan(self.ctx, self.source, self.nodes,
-                                       speculate=speculate)
+                                       speculate=speculate,
+                                       objective=objective)
         return plans[key]
 
     # ---- concurrent node dispatch -----------------------------------------
@@ -357,16 +372,19 @@ class Pipeline:
             i = j
         return groups
 
-    def _copack_group_ids(self, group: List[PlanNode]) -> List:
-        """Prefix identities shared by >= 2 nodes of one dispatch group —
-        the co-packable set this group activates on the context while it
-        runs (a lone node never pays the packing-queue linger)."""
-        counts: dict = {}
+    def _copack_group_ids(self, group: List[PlanNode]) -> Dict:
+        """Prefix identities shared by >= 2 nodes of one dispatch
+        group, mapped to how many member nodes will dispatch under each
+        — the co-packable set AND rider-expectation counts this group
+        activates on the context while it runs (a lone node never pays
+        the packing-queue linger, and a pack whose last expected rider
+        has arrived flushes immediately)."""
+        counts: Dict = {}
         for node in group:
             ident = copack_identity(self.ctx, node)
             if ident is not None:
                 counts[ident] = counts.get(ident, 0) + 1
-        return [i for i, n in counts.items() if n >= 2]
+        return {i: n for i, n in counts.items() if n >= 2}
 
     def _run_group(self, t_in: Table, group: List[PlanNode]) -> Table:
         """Execute a group of independent map nodes concurrently over one
@@ -414,7 +432,7 @@ class Pipeline:
 
     def collect(self, optimize: bool = True,
                 parallel: Optional[bool] = None,
-                speculate=None) -> Table:
+                speculate=None, objective: Optional[str] = None) -> Table:
         """Execute the plan.  ``optimize=False`` is the escape hatch that
         runs the nodes exactly as chained (no pushdown/fusion/reorder —
         and no speculation, which is an optimizer rewrite).
@@ -432,45 +450,67 @@ class Pipeline:
         surviving tuple stream bit-for-bit but may issue extra requests
         over tuples a serial chain would have eliminated — the expected
         waste, predicted from recorded selectivity, is reported by
-        ``explain()`` and bounded by ``ctx.speculate_waste_cap``."""
+        ``explain()`` and bounded by ``ctx.speculate_waste_cap``.
+
+        ``objective`` overrides the context's scheduling objective for
+        this execution: ``"latency"`` bounds the co-pack linger by the
+        calibrated expected-arrival window and ranks plan rewrites by
+        estimated wall-clock, ``"cost"`` keeps the full configured
+        linger (density dial) and ranks by token/request spend."""
         if parallel is None:
             parallel = self.ctx.scheduler is not None
         if speculate is None:
             speculate = self.ctx.speculate
+        if objective is not None and objective not in ("latency", "cost"):
+            raise ValueError("objective must be 'latency' or 'cost', "
+                             f"got {objective!r}")
         if optimize:
             # remembered for explain(); an optimize=False run bypasses
             # the optimizer entirely, so recording its speculate mode
             # would make explain() describe a plan that never ran
             self._last_speculate = speculate
-        nodes = self._plan(speculate).nodes if optimize else self.nodes
-        self._executed_nodes = nodes
-        self._executed_optimized = optimize
-        t = self.source
-        base = len(self.ctx.reports)
-        groups = (self._dispatch_groups(nodes) if parallel
-                  else [[n] for n in nodes])
+        # the override must reach runtime decisions (ctx.copack_linger)
+        # taken on worker threads mid-execution, so it is installed on
+        # the context for the duration and restored afterwards
+        prev_objective = self.ctx.objective
+        if objective is not None:
+            self.ctx.objective = objective
         try:
-            for group in groups:
-                if len(group) > 1:
-                    t = self._run_group(t, group)
-                    continue
-                node = group[0]
-                if node.fn is not None:
-                    before = len(self.ctx.reports)
-                    t = node.fn(t)
-                    # spec-chain members append reports from their own
-                    # threads and record the slots themselves; the main
-                    # thread's thread-local slot would be stale here
-                    if (len(self.ctx.reports) > before
-                            and "member_report_slots" not in node.info):
-                        slot = self.ctx.last_report_slot()
-                        node.report_slot = before if slot is None else slot
-                    node.info["rows_out"] = len(t)
+            nodes = (self._plan(speculate).nodes if optimize
+                     else self.nodes)
+            self._executed_nodes = nodes
+            self._executed_optimized = optimize
+            t = self.source
+            base = len(self.ctx.reports)
+            groups = (self._dispatch_groups(nodes) if parallel
+                      else [[n] for n in nodes])
+            try:
+                for group in groups:
+                    if len(group) > 1:
+                        t = self._run_group(t, group)
+                        continue
+                    node = group[0]
+                    if node.fn is not None:
+                        before = len(self.ctx.reports)
+                        t = node.fn(t)
+                        # spec-chain members append reports from their
+                        # own threads and record the slots themselves;
+                        # the main thread's thread-local slot would be
+                        # stale here
+                        if (len(self.ctx.reports) > before
+                                and "member_report_slots"
+                                not in node.info):
+                            slot = self.ctx.last_report_slot()
+                            node.report_slot = (before if slot is None
+                                                else slot)
+                        node.info["rows_out"] = len(t)
+            finally:
+                # bookkeeping + debounced sidecars survive node errors:
+                # earlier filters' observations would otherwise be lost
+                self._last_reports = self.ctx.reports[base:]
+                self.ctx.flush_stats()
         finally:
-            # bookkeeping + debounced sidecars survive node errors:
-            # earlier filters' observations would otherwise be lost
-            self._last_reports = self.ctx.reports[base:]
-            self.ctx.flush_stats()
+            self.ctx.objective = prev_objective
         return t
 
     def reduce(self, model, prompt, cols: Sequence[str],
@@ -540,6 +580,22 @@ class Pipeline:
         lines.append("Optimized plan:")
         self._render_nodes(lines, opt.nodes, opt.optimized_node_costs)
         lines.append(f"  estimated: {opt.optimized_cost}")
+        if opt.frontiers:
+            # both scheduling frontiers of the optimized plan: the
+            # co-packed request count is free under "latency" (last-
+            # tail-out), while "cost" may spend up to the configured
+            # linger per packed group waiting for denser merges
+            lines.append("Objectives:")
+            for name in ("latency", "cost"):
+                fr = opt.frontiers.get(name)
+                if fr is None:
+                    continue
+                wall = ("est_wall=uncalibrated"
+                        if fr["est_wall"] is None
+                        else f"est_wall={fr['est_wall']:.3f}s")
+                star = "  <- active" if name == opt.objective else ""
+                lines.append(f"  {name}: packed_req={fr['packed_req']} "
+                             f"{wall}{star}")
         if opt.rewrites:
             lines.append("Rewrites applied:")
             for rw in opt.rewrites:

@@ -134,7 +134,10 @@ def _embed_corpus_and_queries(ctx: SemanticContext, model_spec,
         except BaseException as exc:       # re-raised on the caller
             errors.append(exc)
 
-    ctx.copack_begin([ident])
+    # two expected submitters under one embedding identity (corpus +
+    # queries): the scheduler flushes the merged pack the moment the
+    # second tail arrives instead of waiting out the linger deadline
+    ctx.copack_begin({ident: 2})
     try:
         threads = [
             threading.Thread(
@@ -153,7 +156,7 @@ def _embed_corpus_and_queries(ctx: SemanticContext, model_spec,
         for th in threads:
             th.join()
     finally:
-        ctx.copack_end([ident])
+        ctx.copack_end({ident: 2})
     if errors:
         raise errors[0]
     return slots[0][0], slots[1]

@@ -11,13 +11,14 @@ regression tests for the three PR bugfixes:
 """
 
 import json
+import threading
 import time
 
 import pytest
 
 from repro.core import (MockProvider, PredictionCache, RequestScheduler,
                         SelectivityStore, SemanticContext,
-                        headroom_factor, llm_complete,
+                        headroom_factor, llm_complete, llm_multi,
                         reset_global_catalog)
 from repro.core.batching import ContextOverflowError, plan_batches
 from repro.core.cache import (CalibrationStore, HEADROOM_MIN,
@@ -466,6 +467,214 @@ def test_copack_same_name_different_caps_do_not_merge():
         assert sched.stats.packed_requests == 0
     assert rows == rows_serial
     assert ctx.provider.stats.calls == ctx_serial.provider.stats.calls
+
+
+# ---------------------------------------------------------------------------
+# latency-first scheduling: rider expectations + deadline-aware flush
+# ---------------------------------------------------------------------------
+def test_copack_last_tail_out_flushes_immediately():
+    # both expected submitters registered: the merged pack dispatches
+    # the moment the second tail arrives, not after the 5s linger
+    calls = []
+    key = (_resource(context_window=1000).ref, "shared-prefix")
+    t0 = time.monotonic()
+    with RequestScheduler(pack_linger_s=5.0) as sched:
+        sched.pack_expect(key, 2)
+        ja, jb, rows_a, rows_b = _submit_packed_pair(sched, calls)
+        va, _ = ja.result(timeout=10)
+        vb, _ = jb.result(timeout=10)
+    assert time.monotonic() - t0 < 4.0, \
+        "last-tail-out did not flush: merged pack waited out the linger"
+    assert va == [f"r:{r}" for r in rows_a]
+    assert vb == [f"r:{r}" for r in rows_b]
+    assert len(calls) == 1
+    assert sorted(calls[0]) == sorted(rows_a + rows_b)
+    assert sched.stats.packed_requests == 1
+
+
+def test_copack_sole_expected_tail_skips_parking():
+    # a lone tail from the LAST expected submitter has no one to wait
+    # for: it dispatches immediately instead of parking
+    calls = []
+    model = _resource()
+    rows = ["x0", "x1"]
+
+    def pack_call(batch):
+        calls.append(list(batch))
+        return [f"r:{r}" for r in batch]
+
+    t0 = time.monotonic()
+    with RequestScheduler(pack_linger_s=5.0) as sched:
+        sched.pack_expect((model.ref, "p"), 1)
+        job = sched.submit_map(
+            model, ["k0", "k1"], [10, 10], prefix_tokens=10,
+            run=lambda ps: pack_call([rows[p] for p in ps]),
+            single_flight=False, pack_key="p", pack_rows=rows,
+            pack_call=pack_call)
+        vals, _ = job.result(timeout=10)
+    assert vals == ["r:x0", "r:x1"]
+    assert time.monotonic() - t0 < 4.0
+    assert len(calls) == 1
+    assert sched.stats.packed_requests == 0
+
+
+def test_copack_retire_flushes_lone_parked_tail():
+    # regression (copack_end bugfix): when the group closes with a
+    # registered submitter that never dispatched, the surviving parked
+    # tail must flush immediately, not wait out the deadline
+    calls = []
+    model = _resource()
+    rows = ["x0", "x1"]
+
+    def pack_call(batch):
+        calls.append(list(batch))
+        return [f"r:{r}" for r in batch]
+
+    key = (model.ref, "p")
+    t0 = time.monotonic()
+    with RequestScheduler(pack_linger_s=5.0) as sched:
+        sched.pack_expect(key, 2)
+        job = sched.submit_map(
+            model, ["k0", "k1"], [10, 10], prefix_tokens=10,
+            run=lambda ps: pack_call([rows[p] for p in ps]),
+            single_flight=False, pack_key="p", pack_rows=rows,
+            pack_call=pack_call)
+        time.sleep(0.05)            # the tail parks, rider outstanding
+        sched.pack_retire(key, 1)   # ...the rider never dispatches
+        vals, _ = job.result(timeout=10)
+    assert vals == ["r:x0", "r:x1"]
+    assert time.monotonic() - t0 < 4.0, \
+        "retiring the last expectation must flush the parked pack"
+    assert len(calls) == 1
+    assert sched.stats.packed_requests == 0
+
+
+def test_copack_overflow_remainder_repacks():
+    # an overflow-split remainder is exactly a part-filled tail: it
+    # merges into a pending same-identity pack instead of paying a
+    # sparse request of its own
+    calls = []
+    model = _resource(context_window=1000)
+    rows_b = [f"b{i}" for i in range(4)]
+    rows_a = [f"a{i}" for i in range(8)]
+    failed = []
+
+    def pack_call(batch):
+        if len(batch) == 8 and not failed:
+            failed.append(True)
+            raise ContextOverflowError("merged too large")
+        calls.append(list(batch))
+        return [f"r:{r}" for r in batch]
+
+    def make_run(rows):
+        def run(positions):
+            return pack_call([rows[p] for p in positions])
+        return run
+
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        # job B: light 4-row tail parks (weight 112 of budget 900)
+        jb = sched.submit_map(
+            model, [f"kb{i}" for i in range(4)], [20] * 4,
+            prefix_tokens=100, run=make_run(rows_b),
+            single_flight=False, pack_key="p", pack_rows=rows_b,
+            pack_call=pack_call)
+        # job A: one near-full 8-row batch (weight 784 > 0.85 * 900 —
+        # not parked) overflows once, splits 7+1; the 1-row remainder
+        # rides B's parked pack
+        ja = sched.submit_map(
+            model, [f"ka{i}" for i in range(8)], [90] * 8,
+            prefix_tokens=100, run=make_run(rows_a),
+            single_flight=False, pack_key="p", pack_rows=rows_a,
+            pack_call=pack_call)
+        va, sa = ja.result(timeout=10)
+        vb, _ = jb.result(timeout=10)
+    assert va == [f"r:{r}" for r in rows_a]
+    assert vb == [f"r:{r}" for r in rows_b]
+    assert sched.stats.repacked_tails >= 1
+    assert sa.retries == 1
+    assert any(set(c) & set(rows_a) and set(c) & set(rows_b)
+               for c in calls), \
+        "the overflow remainder did not merge with the parked tail"
+
+
+def test_llm_multi_copack_bit_identical_demux():
+    # fused multi-output dispatches co-pack on the full rendered
+    # multi-task prompt; the merged request demuxes bit-identically to
+    # serial execution across every sub-output
+    reset_global_catalog()
+    from repro.core import build_multi_task
+    subtasks = [{"kind": "filter", "prompt": {"prompt": "keep?"}},
+                {"kind": "complete", "prompt": {"prompt": "summarize"}}]
+    n = 22
+    rows_a = [{"a": f"first text number {i} with body"}
+              for i in range(n)]
+    rows_b = [{"b": f"second text number {i} with body"}
+              for i in range(n)]
+
+    serial = SemanticContext(provider=MockProvider(),
+                             max_batch=_COPACK_MAX_BATCH)
+    expect_a = llm_multi(serial, _COPACK_MODEL, subtasks, rows_a)
+    expect_b = llm_multi(serial, _COPACK_MODEL, subtasks, rows_b)
+
+    with RequestScheduler(pack_linger_s=5.0) as sched:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched,
+                              max_batch=_COPACK_MAX_BATCH)
+        model = ctx.resolve_model(_COPACK_MODEL)
+        texts = [ctx.resolve_prompt(st["prompt"])[0] for st in subtasks]
+        ident = (id(ctx.provider), model, "multi", ctx.serialization,
+                 build_multi_task([st["kind"] for st in subtasks],
+                                  texts))
+        out = [None, None]
+
+        def worker(slot, rows):
+            out[slot] = llm_multi(ctx, _COPACK_MODEL, subtasks, rows)
+
+        t0 = time.monotonic()
+        ctx.copack_begin({ident: 2})
+        try:
+            threads = [threading.Thread(target=worker, args=(0, rows_a)),
+                       threading.Thread(target=worker, args=(1, rows_b))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        finally:
+            ctx.copack_end({ident: 2})
+        elapsed = time.monotonic() - t0
+    assert out[0] == expect_a
+    assert out[1] == expect_b
+    assert sched.stats.packed_requests >= 1
+    assert elapsed < 4.0, \
+        "last-tail-out must beat the 5s linger for fused dispatches"
+
+
+def test_copack_identity_covers_fused_nodes():
+    # the optimizer's fused nodes expose the SAME identity llm_multi
+    # mints, so structurally identical fusions can ride one request
+    from repro.core import build_multi_task
+    ctx = SemanticContext(provider=MockProvider())
+    table = _copack_table()
+
+    def build(col):
+        return (Pipeline(ctx, table, "docs")
+                .llm_filter(_COPACK_MODEL, {"prompt": "keep?"}, [col])
+                .llm_complete("s", _COPACK_MODEL,
+                              {"prompt": "summarize"}, [col]))
+
+    na = build("a")._plan().nodes[1]
+    nb = build("b")._plan().nodes[1]
+    assert na.op == "llm_fused" == nb.op
+    ida, idb = copack_identity(ctx, na), copack_identity(ctx, nb)
+    assert ida is not None and ida == idb
+    assert ida[2] == "multi"
+    texts = [ctx.resolve_prompt(p)[0] for p in na.info["prompts"]]
+    assert ida[4] == build_multi_task(na.info["kinds"], texts)
+    # a structurally different fusion (other prompt) must not alias
+    other = (Pipeline(ctx, table, "docs")
+             .llm_filter(_COPACK_MODEL, {"prompt": "drop?"}, ["a"])
+             .llm_complete("s", _COPACK_MODEL, {"prompt": "summarize"},
+                           ["a"]))._plan().nodes[1]
+    assert copack_identity(ctx, other) != ida
 
 
 def test_copack_concurrent_distinct_prefixes_do_not_merge():

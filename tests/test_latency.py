@@ -1,0 +1,225 @@
+"""Latency-first scheduling tests: monotonic latency measurement (the
+provider must not mix wall clock and monotonic clock with the
+scheduler), CalibrationStore self-heal on corrupt legacy sidecars, the
+calibrated co-pack linger window, and the ``objective`` knob's surface
+through the optimizer and ``explain()``.
+"""
+
+import json
+import time
+
+import pytest
+
+from repro.core import (MockProvider, RequestScheduler, SemanticContext,
+                        llm_complete, reset_global_catalog)
+from repro.core.cache import CalibrationStore
+from repro.core.metaprompt import build_metaprompt
+from repro.core.resources import ModelResource
+from repro.core.scheduler import (PACK_LINGER_LATENCY_FRACTION,
+                                  PACK_LINGER_MIN_S)
+from repro.engine import Pipeline, Table, copack_identity
+
+_MODEL = {"model": "cp", "context_window": 100_000,
+          "max_output_tokens": 8, "max_concurrency": 8}
+
+
+def _two_node_pipe(ctx, n=22):
+    table = Table({
+        "a": [f"first column text number {i} with body" for i in range(n)],
+        "b": [f"second column text number {i} with body"
+              for i in range(n)],
+    })
+    return (Pipeline(ctx, table, "docs")
+            .llm_complete("s1", _MODEL, {"prompt": "summarize"}, ["a"])
+            .llm_complete("s2", _MODEL, {"prompt": "summarize"}, ["b"]))
+
+
+# ---------------------------------------------------------------------------
+# bugfix: provider latency measurement must be monotonic
+# ---------------------------------------------------------------------------
+def test_mock_provider_latency_survives_wall_clock_step(monkeypatch):
+    # an NTP step (wall clock jumping backwards mid-request) must not
+    # record a negative latency — the scheduler's deadlines are
+    # monotonic, so the provider's measurements must be too
+    import repro.core.provider as pm
+    steps = iter([1e9 - 100.0 * i for i in range(64)])
+    monkeypatch.setattr(pm.time, "time", lambda: next(steps))
+    model = ModelResource(name="m", version=1, arch="mock",
+                          context_window=4096, max_output_tokens=8,
+                          max_concurrency=4)
+    prov = pm.MockProvider()
+    mp = build_metaprompt("complete", "p", [{"t": "x"}], "xml")
+    out = prov.complete(model, mp, 1)
+    assert len(out) == 1
+    assert prov.stats.latency_s >= 0.0, \
+        "latency went negative: wall clock used instead of monotonic"
+
+
+def test_calibration_latencies_nonnegative_under_clock_step(monkeypatch):
+    import repro.core.provider as pm
+    steps = iter([1e9 - 100.0 * i for i in range(4096)])
+    monkeypatch.setattr(pm.time, "time",
+                        lambda: next(steps, 0.0))
+    ctx = SemanticContext(provider=MockProvider())
+    llm_complete(ctx, _MODEL, {"prompt": "p"},
+                 [{"t": f"row {i}"} for i in range(4)])
+    for rec in ctx.calibration_stats.values():
+        assert all(x >= 0 for x in rec["latency_s"])
+
+
+# ---------------------------------------------------------------------------
+# bugfix: CalibrationStore self-heals corrupt legacy sidecars
+# ---------------------------------------------------------------------------
+def test_calibration_store_drops_negative_latency_values(tmp_path):
+    # a sidecar written before the monotonic fix may hold negative
+    # latencies; the record must load with the bad SAMPLES dropped, not
+    # be discarded wholesale (the counters are still good)
+    path = tmp_path / "c.json"
+    path.write_text(
+        '{"models": {"m@1": {"requests": 10, "retries": 1, '
+        '"tuples": 50, "latency_s": '
+        '[0.1, -3.0, Infinity, NaN, true, "bogus", 0.2]}}}')
+    loaded = CalibrationStore(str(path)).load()
+    assert loaded["m@1"]["requests"] == 10
+    assert loaded["m@1"]["retries"] == 1
+    assert loaded["m@1"]["latency_s"] == [0.1, 0.2]
+
+
+def test_calibration_store_still_rejects_malformed_records(tmp_path):
+    path = tmp_path / "c.json"
+    path.write_text(json.dumps({"models": {
+        "a@1": {"requests": -1, "retries": 0, "tuples": 0,
+                "latency_s": []},
+        "b@1": {"requests": 1, "retries": 0, "tuples": 2,
+                "latency_s": "oops"},
+        "c@1": {"requests": 1, "retries": 0, "tuples": 2,
+                "latency_s": [0.3]},
+    }}))
+    loaded = CalibrationStore(str(path)).load()
+    assert set(loaded) == {"c@1"}
+    assert loaded["c@1"]["latency_s"] == [0.3]
+
+
+# ---------------------------------------------------------------------------
+# calibrated linger window
+# ---------------------------------------------------------------------------
+def test_copack_linger_calibrated_window():
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched)
+        assert ctx.copack_linger("m@1") is None      # uncalibrated
+        ctx.record_calibration("m@1", requests=4, retries=0, tuples=8,
+                               latencies=[0.1] * 4)
+        assert ctx.copack_linger("m@1") == pytest.approx(
+            PACK_LINGER_LATENCY_FRACTION * 0.1)
+        # capped at the scheduler's configured window
+        ctx.record_calibration("slow@1", requests=4, retries=0,
+                               tuples=8, latencies=[10.0] * 4)
+        assert ctx.copack_linger("slow@1") == 0.5
+        # floored for very fast models
+        ctx.record_calibration("fast@1", requests=4, retries=0,
+                               tuples=8, latencies=[1e-5] * 4)
+        assert ctx.copack_linger("fast@1") == PACK_LINGER_MIN_S
+    # the cost objective keeps the fixed window (density dial)
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched,
+                              objective="cost")
+        ctx.record_calibration("m@1", requests=4, retries=0, tuples=8,
+                               latencies=[0.1] * 4)
+        assert ctx.copack_linger("m@1") is None
+    # no scheduler: nothing to linger
+    ctx = SemanticContext(provider=MockProvider())
+    ctx.record_calibration("m@1", requests=4, retries=0, tuples=8,
+                           latencies=[0.1] * 4)
+    assert ctx.copack_linger("m@1") is None
+
+
+def test_parked_tail_deadline_respects_calibrated_window():
+    # a parked segment is never older than the calibrated window: with
+    # a 30s configured linger but ~0.2s observed latency, a tail whose
+    # rider never shows dispatches on the ~0.1s calibrated deadline
+    reset_global_catalog()
+    rows = [{"a": f"text number {i} with body"} for i in range(22)]
+    with RequestScheduler(pack_linger_s=30.0) as sched:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched,
+                              max_batch=16)
+        ref = ctx.resolve_model(_MODEL).ref
+        ctx.record_calibration(ref, requests=4, retries=0, tuples=64,
+                               latencies=[0.2] * 4)
+        probe = Pipeline(ctx, Table({"a": [r["a"] for r in rows]}), "d") \
+            .llm_complete("s", _MODEL, {"prompt": "summarize"}, ["a"])
+        ident = copack_identity(ctx, probe.nodes[-1])
+        t0 = time.monotonic()
+        ctx.copack_begin({ident: 2})     # a rider is expected...
+        try:
+            out = llm_complete(ctx, _MODEL, {"prompt": "summarize"},
+                               rows)
+        finally:
+            ctx.copack_end({ident: 2})   # ...but never dispatches
+        elapsed = time.monotonic() - t0
+    assert len(out) == len(rows) and all(v is not None for v in out)
+    assert elapsed < 5.0, \
+        f"parked tail waited {elapsed:.1f}s: calibrated deadline ignored"
+    assert sched.stats.packed_requests == 0
+
+
+# ---------------------------------------------------------------------------
+# objective knob: context / collect / optimizer / explain
+# ---------------------------------------------------------------------------
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        SemanticContext(provider=MockProvider(), objective="bogus")
+    ctx = SemanticContext(provider=MockProvider())
+    assert ctx.objective == "latency"
+    pipe = _two_node_pipe(ctx, n=4)
+    with pytest.raises(ValueError):
+        pipe.collect(objective="bogus")
+
+
+def test_collect_objective_override_restores_context():
+    reset_global_catalog()
+    ctx = SemanticContext(provider=MockProvider(), max_batch=16)
+    pipe = _two_node_pipe(ctx)
+    rows_default = pipe.collect().rows()
+    rows_cost = pipe.collect(objective="cost").rows()
+    assert rows_cost == rows_default, \
+        "the objective is a scheduling knob: rows must be identical"
+    assert ctx.objective == "latency"
+
+
+def test_explain_reports_objective_frontiers():
+    reset_global_catalog()
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched,
+                              max_batch=16)
+        pipe = _two_node_pipe(ctx)
+        text = pipe.explain()
+        plan = pipe._plan()
+        cost_plan = pipe._plan(objective="cost")
+    assert "Objectives:" in text
+    assert "latency:" in text and "cost:" in text
+    assert "<- active" in text
+    assert plan.objective == "latency"
+    assert cost_plan.objective == "cost"
+    assert plan.frontiers["latency"]["packed_req"] \
+        == plan.optimized_cost.packed_requests
+    # uncalibrated: no wall estimate on either frontier
+    assert plan.frontiers["latency"]["est_wall"] is None
+    assert "est_wall=uncalibrated" in text
+
+
+def test_frontiers_price_pack_wait_when_calibrated():
+    # the cost frontier's wall estimate carries the linger the density
+    # dial would spend waiting for merges; the latency frontier doesn't
+    reset_global_catalog()
+    with RequestScheduler(pack_linger_s=0.5) as sched:
+        ctx = SemanticContext(provider=MockProvider(), scheduler=sched,
+                              max_batch=16)
+        ctx.record_calibration(ctx.resolve_model(_MODEL).ref,
+                               requests=4, retries=0, tuples=64,
+                               latencies=[0.05] * 4)
+        plan = _two_node_pipe(ctx)._plan()
+    fr = plan.frontiers
+    assert fr["latency"]["est_wall"] is not None
+    assert plan.optimized_cost.pack_wait_s > 0
+    assert fr["cost"]["est_wall"] == pytest.approx(
+        fr["latency"]["est_wall"] + plan.optimized_cost.pack_wait_s)
