@@ -28,6 +28,11 @@ reproduced here:
     rows bit-identical to the imperative composition, retrieval cost
     in explain(), packed session wall-clock <= isolated sessions;
     emits BENCH_rag.json)
+  * million-document retrieval -> bench_ann (100k-doc synthetic corpus:
+    exact jnp scan vs Pallas-routed block-max scan vs IVF-ANN wall-clock
+    + measured recall@10; incremental append embeds ONLY the delta vs a
+    from-scratch rebuild — request/tuple counts asserted; emits
+    BENCH_ann.json, recall gated by BENCH_ANN_RECALL_MIN)
   * Query 3 hybrid search -> bench_hybrid_search
   * serving engine -> bench_continuous_batching
   * kernels -> bench_kernel_* (interpret-mode correctness-path timing; the
@@ -694,6 +699,119 @@ def bench_rag():
     return req_off / max(req_on, 1)
 
 
+def bench_ann():
+    """Million-document retrieval (ISSUE 7): IVF-ANN vs the exact scan.
+
+    A 100k-doc clustered synthetic corpus (the geometry real embedding
+    corpora exhibit), 64 queries, k=10:
+
+      * exact numpy scan (the ``IVFIndex.exact_scan`` scorer — the same
+        arithmetic the IVF path shortcuts to at full probing);
+      * Pallas-routed ``topk_sim`` block-max scan (``VectorIndex``
+        ``use_kernel=True`` path; interpret-mode on CPU hosts);
+      * IVF-ANN at the calibrated nprobe for recall target 0.95.
+
+    Asserts measured recall@10 >= ``BENCH_ANN_RECALL_MIN`` (0.95) and
+    IVF speedup over exact >= ``BENCH_ANN_MIN_SPEEDUP`` (5.0 — relaxable
+    on oversubscribed CI).  Then the incremental-append contract on a
+    provider-backed corpus: growing a built index embeds ONLY the delta
+    texts (tuple counts asserted), rows bit-identical to a rebuild.
+    """
+    from repro.core import MockProvider, SemanticContext
+    from repro.retrieval import VectorIndex, ensure_index
+
+    n_docs, dim, n_q, k = 100_000, 64, 64, 10
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((64, dim)).astype(np.float32) * 4.0
+    labels = rng.integers(0, 64, n_docs)
+    vs = (centers[labels]
+          + rng.standard_normal((n_docs, dim)).astype(np.float32))
+    qs = vs[rng.integers(0, n_docs, n_q)] + 0.05 * rng.standard_normal(
+        (n_q, dim)).astype(np.float32)
+
+    index = VectorIndex(vs)
+    qn = qs / np.maximum(np.linalg.norm(qs, axis=1, keepdims=True), 1e-9)
+    t0 = time.perf_counter()
+    ivf = index.ivf()                          # build + calibrate once
+    dt_build = time.perf_counter() - t0
+    nprobe = ivf.nprobe_for(0.95)
+
+    dt_exact = _timeit(lambda: ivf.exact_scan(qn, k), n=3, warmup=1)
+    dt_kernel = _timeit(
+        lambda: VectorIndex(vs, use_kernel=True).topk(qs, k), n=1,
+        warmup=1)
+    dt_ivf = _timeit(lambda: ivf.search(qn, k, nprobe), n=3, warmup=1)
+
+    _, i_exact = ivf.exact_scan(qn, k)
+    _, i_ivf = ivf.search(qn, k, nprobe)
+    recall = float(np.mean([len(set(a) & set(b)) / k
+                            for a, b in zip(i_ivf, i_exact)]))
+    speedup = dt_exact / max(dt_ivf, 1e-9)
+
+    recall_min = float(os.environ.get("BENCH_ANN_RECALL_MIN", "0.95"))
+    speedup_min = float(os.environ.get("BENCH_ANN_MIN_SPEEDUP", "5.0"))
+    assert recall >= recall_min, \
+        f"IVF recall@{k} {recall:.3f} below the {recall_min} gate " \
+        f"(nprobe={nprobe}/{ivf.nlist})"
+    assert speedup >= speedup_min, \
+        f"IVF speedup {speedup:.1f}x below the {speedup_min}x gate " \
+        f"({dt_exact*1e3:.1f}ms exact vs {dt_ivf*1e3:.1f}ms IVF)"
+
+    # incremental append: only the delta embeds, rows match a rebuild
+    texts = [f"passage {i} body {i % 97}" for i in range(600)]
+    emb = {"model": "emb", "embedding_dim": 32, "context_window": 4096}
+
+    def embeds(ctx):
+        return sum(r.n_tuples for r in ctx.reports
+                   if r.function == "embedding")
+
+    ctx = SemanticContext(provider=MockProvider(), enable_cache=False)
+    ensure_index(ctx, emb, texts[:500])
+    base_embeds = embeds(ctx)
+    t0 = time.perf_counter()
+    grown, src = ensure_index(ctx, emb, texts)
+    dt_append = time.perf_counter() - t0
+    append_embeds = embeds(ctx) - base_embeds
+    assert src == "appended" and append_embeds == 100, \
+        f"append embedded {append_embeds} tuples (want the 100-delta), " \
+        f"source={src}"
+
+    ctx2 = SemanticContext(provider=MockProvider(), enable_cache=False)
+    t0 = time.perf_counter()
+    rebuilt, _ = ensure_index(ctx2, emb, texts)
+    dt_rebuild = time.perf_counter() - t0
+    rebuild_embeds = embeds(ctx2)
+    assert rebuild_embeds == 600
+    assert np.array_equal(grown.raw, rebuilt.raw), \
+        "appended index diverges from the from-scratch rebuild"
+
+    results = {
+        "docs": n_docs, "dim": dim, "queries": n_q, "k": k,
+        "nlist": ivf.nlist, "nprobe": nprobe,
+        "recall_at_k": round(recall, 4),
+        "exact_scan_ms": round(dt_exact * 1e3, 2),
+        "pallas_scan_ms": round(dt_kernel * 1e3, 2),
+        "ivf_scan_ms": round(dt_ivf * 1e3, 2),
+        "ivf_build_s": round(dt_build, 3),
+        "ivf_speedup_vs_exact": round(speedup, 2),
+        "append_embedded_tuples": append_embeds,
+        "rebuild_embedded_tuples": rebuild_embeds,
+        "append_wall_s": round(dt_append, 4),
+        "rebuild_wall_s": round(dt_rebuild, 4),
+    }
+    out_path = Path(__file__).resolve().parent / "BENCH_ann.json"
+    out_path.write_text(json.dumps(results, indent=1))
+
+    _row("ann_exact_scan", dt_exact * 1e6 / n_q, f"docs={n_docs}")
+    _row("ann_pallas_scan", dt_kernel * 1e6 / n_q, "use_kernel=True")
+    _row("ann_ivf_scan", dt_ivf * 1e6 / n_q,
+         f"recall@{k}={recall:.3f} nprobe={nprobe}/{ivf.nlist} "
+         f"speedup={speedup:.1f}x json={out_path.name}")
+    _row("ann_incremental_append", dt_append * 1e6,
+         f"delta_tuples={append_embeds} rebuild_tuples={rebuild_embeds}")
+    return speedup
+
+
 def bench_caching():
     from repro.core import MockProvider, SemanticContext, llm_complete
     rows = [{"r": f"text {i}"} for i in range(100)]
@@ -842,6 +960,7 @@ _ALL_BENCHES = {
     "speculative": bench_speculative,
     "copack": bench_copack,
     "rag": bench_rag,
+    "ann": bench_ann,
     "caching": bench_caching,
     "dedup": bench_dedup,
     "fusion_methods": bench_fusion_methods,

@@ -103,6 +103,42 @@ def main():
         print(f"  [{r['score']:.4f}] {r['content']}")
     print("\n" + pipe.explain())
 
+    # ---- million-document posture: ANN + incremental append ---------
+    # ann="auto" lets the optimizer price the IVF probe FLOPs against
+    # the exact scan per node: the 12-passage corpus above stays exact,
+    # this larger one flips to IVF — explain() shows both frontiers
+    # (ann[... ivf_flops=... exact_flops=...]) and the ann_select
+    # rewrite that resolved the choice.
+    big_corpus = Table({"content": [
+        f"passage {i}: {PASSAGES[i % len(PASSAGES)]}" for i in range(2000)
+    ]})
+    ann_pipe = (Pipeline(ctx, question, "question")
+                .vector_topk("score", emb_model, "q", big_corpus,
+                             k=5, doc_col="content",
+                             ann="auto", recall_target=0.95))
+    ann_pipe.collect()
+    print("\nann=\"auto\" over a 2000-doc corpus (optimizer picks IVF):")
+    for line in ann_pipe.explain().splitlines():
+        if "ann" in line:
+            print("  " + line.strip())
+
+    # growing a built index embeds ONLY the delta: the session (or the
+    # IndexStore sidecar) memoises the prefix, and the new texts are
+    # appended as a segment — no re-embedding of the base corpus.
+    from repro.retrieval import ensure_index
+
+    def embedded_tuples():
+        return sum(r.n_tuples for r in ctx.reports
+                   if r.function == "embedding")
+
+    before = embedded_tuples()
+    grown = big_corpus.column("content") + [
+        f"fresh passage {i}" for i in range(50)]
+    _, source = ensure_index(ctx, emb_model, grown)
+    print(f"\nincremental append: source={source!r}, "
+          f"texts embedded for +50 docs: {embedded_tuples() - before} "
+          f"(the 2000-doc base was not re-embedded)")
+
 
 if __name__ == "__main__":
     main()

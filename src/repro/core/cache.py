@@ -276,7 +276,16 @@ class IndexStore:
     atomic replace, corrupt-file recovery (a bad sidecar loads as empty
     and the index is rebuilt, never a crash), and ``prune_stale`` drops
     entries whose model ``name@version`` a catalog resolves to a newer
-    ref.  Bounded to ``INDEX_STORE_CAPACITY`` corpora, oldest first."""
+    ref.  Bounded to ``INDEX_STORE_CAPACITY`` corpora, oldest first.
+
+    Indexes are stored as SEGMENTS so a corpus append persists only the
+    delta: ``append_segment`` records the grown corpus as the base
+    entry's segment chain plus one new segment holding just the new
+    rows.  Entries written before segmentation (``{"vectors": ...}``)
+    still load; the first append converts them in place.  Eviction and
+    pruning garbage-collect segments no surviving entry references, so
+    capacity accounting covers segment payloads too (no orphaned
+    sidecar data)."""
 
     def __init__(self, path: str, capacity: int = INDEX_STORE_CAPACITY):
         self.path = Path(path)
@@ -289,6 +298,7 @@ class IndexStore:
         self._version = 0               # bumped per mutation, under _lock
         self._written = 0               # last version flushed to disk
         self._data: OrderedDict[str, dict] = OrderedDict()
+        self._segments: dict[str, list] = {}
         self._load()
 
     @staticmethod
@@ -296,10 +306,7 @@ class IndexStore:
         return f"{model_ref}|{fingerprint}"
 
     @staticmethod
-    def _valid(rec) -> bool:
-        if not isinstance(rec, dict):
-            return False
-        vecs = rec.get("vectors")
+    def _valid_matrix(vecs) -> bool:
         if not isinstance(vecs, list) or not vecs:
             return False
         width = {len(v) if isinstance(v, list) else -1 for v in vecs}
@@ -307,6 +314,36 @@ class IndexStore:
             return False
         return all(isinstance(x, (int, float)) and x == x
                    for v in vecs for x in v)
+
+    def _valid(self, rec, segments=None) -> bool:
+        if not isinstance(rec, dict):
+            return False
+        if "segments" in rec:
+            segs = rec["segments"]
+            pool = self._segments if segments is None else segments
+            return (isinstance(segs, list) and segs
+                    and all(isinstance(s, str) and s in pool for s in segs))
+        return self._valid_matrix(rec.get("vectors"))
+
+    @staticmethod
+    def _rows(rec) -> int:
+        if "segments" in rec:
+            return int(rec.get("n", 0))
+        return len(rec["vectors"])
+
+    def _gc_segments(self):
+        """Drop segments no live entry references (call under _lock).
+        Evicting an entry frees its segment payloads unless a longer
+        chain still shares them."""
+        live = {s for rec in self._data.values()
+                for s in rec.get("segments", ())}
+        self._segments = {k: v for k, v in self._segments.items()
+                          if k in live}
+
+    def _evict(self):
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+        self._gc_segments()
 
     def _load(self):
         if not self.path.exists():
@@ -317,11 +354,13 @@ class IndexStore:
             return
         if not isinstance(data, dict):
             return
+        segments = {k: v for k, v in data.get("segments", {}).items()
+                    if self._valid_matrix(v)}
         for key, rec in data.get("indexes", {}).items():
-            if self._valid(rec):
+            if self._valid(rec, segments):
                 self._data[key] = rec
-        while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
+        self._segments = segments
+        self._evict()
 
     def get(self, model_ref: str, fingerprint: str):
         """The stored embedding matrix as float32, or None."""
@@ -330,13 +369,32 @@ class IndexStore:
             rec = self._data.get(self._key(model_ref, fingerprint))
             if rec is None:
                 return None
+            if "segments" in rec:
+                return np.concatenate(
+                    [np.asarray(self._segments[s], np.float32)
+                     for s in rec["segments"]], axis=0)
             return np.asarray(rec["vectors"], np.float32)
+
+    def entries(self, model_ref: str) -> list:
+        """(fingerprint, n_rows) for every stored corpus of this model,
+        the prefix-append candidates ``ensure_index`` matches against."""
+        prefix = f"{model_ref}|"
+        with self._lock:
+            return [(k[len(prefix):], self._rows(rec))
+                    for k, rec in self._data.items()
+                    if k.startswith(prefix)]
+
+    def _snapshot(self) -> tuple[dict, int]:
+        """Bump the version and capture a snapshot (call under _lock)."""
+        self._version += 1
+        return ({"indexes": dict(self._data),
+                 "segments": dict(self._segments)}, self._version)
 
     def _write_snapshot(self, snapshot: dict, version: int):
         """Persist one mutation's snapshot.  The version guard makes a
         late writer with a stale snapshot a no-op, so concurrent puts
         cannot roll the file back to a state missing a newer entry."""
-        payload = json.dumps({"indexes": snapshot})
+        payload = json.dumps(snapshot)
         with self._io_lock:
             if version <= self._written:
                 return
@@ -345,27 +403,72 @@ class IndexStore:
             tmp.replace(self.path)
             self._written = version
 
-    def put(self, model_ref: str, fingerprint: str, vectors):
+    @staticmethod
+    def _matrix(vectors):
         import numpy as np
         v = np.asarray(vectors, np.float32)
         if v.ndim != 2 or not v.size:
-            return
+            return None
         # float32 -> python float -> float32 roundtrips exactly, so a
         # reloaded index reproduces the in-session one bit-for-bit
-        rec = {"vectors": [[float(x) for x in row] for row in v]}
+        return [[float(x) for x in row] for row in v]
+
+    def put(self, model_ref: str, fingerprint: str, vectors):
+        mat = self._matrix(vectors)
+        if mat is None:
+            return
+        key = self._key(model_ref, fingerprint)
         with self._lock:
-            self._data[self._key(model_ref, fingerprint)] = rec
-            self._data.move_to_end(self._key(model_ref, fingerprint))
-            while len(self._data) > self.capacity:
-                self._data.popitem(last=False)
-            self._version += 1
-            version = self._version
-            snapshot = dict(self._data)
+            self._data[key] = {"vectors": mat}
+            self._data.move_to_end(key)
+            self._evict()
+            snapshot, version = self._snapshot()
         self._write_snapshot(snapshot, version)
+
+    def _as_segments(self, key: str, rec: dict) -> dict:
+        """Convert a legacy whole-matrix entry to a one-segment chain
+        (call under _lock)."""
+        if "segments" in rec:
+            return rec
+        seg = f"{key}#0"
+        self._segments[seg] = rec["vectors"]
+        new = {"segments": [seg], "n": len(rec["vectors"])}
+        self._data[key] = new
+        return new
+
+    def append_segment(self, model_ref: str, base_fingerprint: str,
+                       fingerprint: str, delta_vectors):
+        """Persist a grown corpus as ``base``'s segment chain plus one
+        new segment holding only ``delta_vectors``.  Falls back to
+        nothing (caller should ``put`` the full matrix) when the base
+        entry is absent.  Returns True when the append was recorded."""
+        mat = self._matrix(delta_vectors)
+        if mat is None:
+            return False
+        base_key = self._key(model_ref, base_fingerprint)
+        key = self._key(model_ref, fingerprint)
+        with self._lock:
+            base = self._data.get(base_key)
+            if base is None:
+                return False
+            base = self._as_segments(base_key, base)
+            seg = f"{key}#{len(base['segments'])}"
+            self._segments[seg] = mat
+            self._data[key] = {"segments": base["segments"] + [seg],
+                               "n": self._rows(base) + len(mat)}
+            self._data.move_to_end(key)
+            self._evict()
+            snapshot, version = self._snapshot()
+        self._write_snapshot(snapshot, version)
+        return True
 
     def keys(self) -> list:
         with self._lock:
             return list(self._data)
+
+    def segment_keys(self) -> list:
+        with self._lock:
+            return list(self._segments)
 
     def has(self, model_ref: str, fingerprint: str) -> bool:
         with self._lock:
@@ -395,11 +498,10 @@ class IndexStore:
             stale = [k for k in self._data if k not in live]
             for k in stale:
                 del self._data[k]
+            self._gc_segments()
             if not (stale and self.path.exists()):
                 return
-            self._version += 1
-            version = self._version
-            snapshot = dict(self._data)
+            snapshot, version = self._snapshot()
         self._write_snapshot(snapshot, version)
 
 

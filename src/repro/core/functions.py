@@ -312,6 +312,15 @@ class SemanticContext:
         with self._index_lock:
             self._index_registry[key] = index
 
+    def index_entries(self, model_ref: str) -> list:
+        """(fingerprint, n_rows) for every session-built index of this
+        model — the prefix-append candidates ``ensure_index`` matches a
+        grown corpus against."""
+        with self._index_lock:
+            return [(fp, len(idx.vectors))
+                    for (ref, fp), idx in self._index_registry.items()
+                    if ref == model_ref]
+
     def index_cached(self, model_ref: str, fingerprint: str) -> bool:
         """Would a retrieval node over this (model, corpus) skip the
         corpus embed?  Feeds the optimizer's cost model (an index found

@@ -78,6 +78,11 @@ from repro.core.metaprompt import build_multi_task, build_prefix, \
     serialize_tuple
 from repro.core.provider import estimate_tokens
 
+from repro.retrieval.ivf import (IVF_MIN_DOCS, default_nlist,
+                                 ivf_scan_flops, planned_nprobe,
+                                 planned_recall)
+from repro.retrieval.vector import DEFAULT_RECALL_TARGET
+
 from .retrieval_ops import RETRIEVAL_OPS, pushed_candidate_k
 from .table import Table
 
@@ -149,6 +154,10 @@ class PlanCost:
     packed_requests: int = 0    # request estimate with tail co-packing
     scan_flops: float = 0.0     # retrieval index-scan cost (non-provider)
     pack_wait_s: float = 0.0    # worst-case co-pack linger (cost frontier)
+    # exact-vs-ANN pricing of a retrieval scan: both frontiers plus the
+    # choice, set only on nodes with an ``ann=`` plan option (explain()
+    # renders it; totals aggregate only the chosen frontier's flops)
+    ann: Optional[dict] = None
 
     def __str__(self):
         s = (f"requests={self.requests} tokens={self.tokens} "
@@ -325,6 +334,84 @@ def _avg_text_tokens(values) -> int:
     return max(1, sum(estimate_tokens(str(v)) for v in vals) // len(vals))
 
 
+# ANN auto-select: IVF must undercut the exact scan by at least this
+# factor before the optimizer switches a node off the exact path — the
+# quantizer build and the recall risk are not worth a marginal win
+ANN_FLOPS_ADVANTAGE = 0.5
+
+
+def _ann_decision(ctx: SemanticContext, info: dict, model_ref: str,
+                  docs: int) -> dict:
+    """Resolve a node's ``ann=`` plan option over a ``docs``-row scan:
+    {choice, nlist, nprobe, recall_target, recall_est, calibrated}.
+
+    ``nlist``/``nprobe`` honour explicit plan options, defaulting to
+    ~sqrt(N) lists and the smallest probe count whose recall estimate
+    meets the target.  The estimate uses a session-built index's
+    calibrated recall curve when one exists, else the planning prior.
+    ``ann="ivf"`` forces IVF and ``"exact"`` the exact scan; ``"auto"``
+    picks IVF iff the corpus is big enough, the recall estimate meets
+    the target, and the probed FLOPs undercut the exact scan by
+    ``ANN_FLOPS_ADVANTAGE`` — a per-query ratio, so the choice is
+    independent of how many queries flow in."""
+    mode = info.get("ann")
+    target = float(info.get("recall_target") or DEFAULT_RECALL_TARGET)
+    nlist = int(info.get("nlist") or default_nlist(docs))
+    nlist = max(1, min(nlist, max(docs, 1)))
+    ivf = None
+    if not info.get("prune_corpus") and info.get("corpus_fp"):
+        idx = ctx.lookup_index((model_ref, info["corpus_fp"]))
+        built = getattr(idx, "_ivf", None)
+        if built is not None and (info.get("nlist") is None
+                                  or built.nlist == nlist):
+            ivf, nlist = built, built.nlist
+    nprobe = info.get("nprobe")
+    if nprobe is None:
+        nprobe = (ivf.nprobe_for(target) if ivf is not None
+                  else planned_nprobe(nlist, target))
+    nprobe = max(1, min(int(nprobe), nlist))
+    recall = (ivf.estimated_recall(nprobe) if ivf is not None
+              else planned_recall(nprobe, nlist))
+    if mode == "ivf":
+        choice = "ivf"
+    elif mode == "exact":
+        choice = "exact"
+    else:                                   # auto
+        ratio = (nlist + docs * nprobe / nlist) / max(docs, 1) / 2.0
+        choice = ("ivf" if docs >= IVF_MIN_DOCS and recall >= target
+                  and ratio <= ANN_FLOPS_ADVANTAGE else "exact")
+    return {"choice": choice, "nlist": nlist, "nprobe": nprobe,
+            "recall_target": target, "recall_est": float(recall),
+            "calibrated": ivf is not None}
+
+
+def _ann_frontiers(ctx: SemanticContext, info: dict, model_ref: str,
+                   nq: int, docs: int, dim: int) -> Optional[dict]:
+    """Both priced scan frontiers for a node with an ``ann=`` option
+    (None otherwise): the resolved choice plus exact and IVF FLOPs."""
+    if not info.get("ann"):
+        return None
+    if info.get("ann_resolved"):
+        dec = {"choice": info["ann_resolved"],
+               "nlist": info["ann_nlist"], "nprobe": info["ann_nprobe"],
+               "recall_target": float(info.get("recall_target")
+                                      or DEFAULT_RECALL_TARGET),
+               "recall_est": info["ann_recall_est"],
+               "calibrated": bool(info.get("ann_calibrated"))}
+    else:
+        dec = _ann_decision(ctx, info, model_ref, docs)
+        if info["ann"] == "auto":
+            # an unresolved auto executes the exact scan — the naive
+            # plan prices that, so explain() shows the optimized plan
+            # dropping the scan FLOPs when ann_select picks IVF
+            dec["choice"] = "exact"
+    dec = dict(dec)
+    dec["exact_flops"] = 2.0 * nq * docs * dim
+    dec["ivf_flops"] = ivf_scan_flops(nq, docs, dim, dec["nlist"],
+                                      dec["nprobe"])
+    return dec
+
+
 def _retrieval_estimate(ctx: SemanticContext, node, rows_in: float,
                         source: Table,
                         seen_corpus: set) -> Tuple[float, PlanCost]:
@@ -358,7 +445,14 @@ def _retrieval_estimate(ctx: SemanticContext, node, rows_in: float,
     model = ctx.resolve_model(info["model"])
     dim = model.embedding_dim or 64
     scan_docs = sel_rows if info.get("prune_corpus") else corpus_rows
-    cost.scan_flops += 2.0 * nq * scan_docs * dim
+    exact_flops = 2.0 * nq * scan_docs * dim
+    ann = _ann_frontiers(ctx, info, model.ref, nq, scan_docs, dim)
+    if ann is not None:
+        cost.ann = ann
+        cost.scan_flops += (ann["ivf_flops"] if ann["choice"] == "ivf"
+                            else ann["exact_flops"])
+    else:
+        cost.scan_flops += exact_flops
 
     per_doc = _avg_text_tokens(info["corpus"].column(info["doc_col"]))
     qcol = info.get("query_col")
@@ -593,6 +687,8 @@ def estimate_plan_cost(ctx: SemanticContext, source: Table,
               "requests": c.requests, "tokens": c.tokens}
         if c.scan_flops:
             nd["scan_flops"] = c.scan_flops
+        if c.ann is not None:
+            nd["ann"] = c.ann
         per_node.append(nd)
         total.requests += c.requests
         total.tokens += c.tokens
@@ -783,6 +879,33 @@ def _retrieval_rewrites(ctx: SemanticContext, nodes: List,
                 rewrites.append(
                     f"k_pushdown(hybrid_topk: k={info['k']} -> "
                     f"per-retriever candidate_k={c})")
+        if (node.op != "bm25_topk" and info.get("ann")
+                and not info.get("ann_resolved")):
+            # ann_select: resolve auto/forced ANN into a concrete scan
+            # choice the executor follows and the cost model prices
+            try:
+                ref = ctx.resolve_model(info["model"]).ref
+            except KeyError:
+                ref = None
+            if ref is not None:
+                docs = info.get("corpus_rows", len(info["corpus"]))
+                if (info.get("corpus_filter") is not None
+                        and changes.get("prune_corpus")):
+                    docs = max(1, int(round(docs * DEFAULT_SELECTIVITY)))
+                probe = dict(info)
+                probe.update(changes)
+                dec = _ann_decision(ctx, probe, ref, docs)
+                changes.update(
+                    ann_resolved=dec["choice"], ann_nlist=dec["nlist"],
+                    ann_nprobe=dec["nprobe"],
+                    ann_recall_est=dec["recall_est"],
+                    ann_calibrated=dec["calibrated"])
+                rewrites.append(
+                    f"ann_select({node.op}: ann={info['ann']} -> "
+                    f"{dec['choice']} nlist={dec['nlist']} "
+                    f"nprobe={dec['nprobe']} "
+                    f"est_recall={dec['recall_est']:.2f}"
+                    f"{' calibrated' if dec['calibrated'] else ''})")
         if "model" in info and info.get("corpus_fp"):
             try:
                 ref = ctx.resolve_model(info["model"]).ref

@@ -234,21 +234,60 @@ class Pipeline:
         info["outs"] = retrieval_outputs(info)
         return self._add(op, make_retrieval_fn(self.ctx, op, info), **info)
 
+    @staticmethod
+    def _ann_info(ann, recall_target, nprobe, nlist) -> dict:
+        """Validated ``ann=`` plan options; {} when ANN is off (keys are
+        only present when requested, so plans without the option render
+        and estimate exactly as before)."""
+        if ann is None:
+            if any(v is not None for v in (recall_target, nprobe, nlist)):
+                raise ValueError(
+                    "recall_target/nprobe/nlist require ann= "
+                    "('auto', 'ivf' or 'exact')")
+            return {}
+        if ann not in ("auto", "ivf", "exact"):
+            raise ValueError(f"ann={ann!r}: expected 'auto', 'ivf', "
+                             f"'exact' or None")
+        out: dict = {"ann": ann}
+        if recall_target is not None:
+            if not 0.0 < float(recall_target) <= 1.0:
+                raise ValueError("recall_target must be in (0, 1]")
+            out["recall_target"] = float(recall_target)
+        for name, v in (("nprobe", nprobe), ("nlist", nlist)):
+            if v is not None:
+                if int(v) < 1:
+                    raise ValueError(f"{name} must be >= 1")
+                out[name] = int(v)
+        return out
+
     def vector_topk(self, out: str, model, query_col: str, corpus: Table,
                     k: int, doc_col: str = "text", corpus_filter=None,
-                    corpus_filter_cols: Optional[Sequence[str]] = None):
+                    corpus_filter_cols: Optional[Sequence[str]] = None,
+                    ann: Optional[str] = None,
+                    recall_target: Optional[float] = None,
+                    nprobe: Optional[int] = None,
+                    nlist: Optional[int] = None):
         """Paper Query 3 step 2 as a plan node: embed ``query_col``,
         scan the corpus embedding index, expand each query row into its
         top-``k`` candidate rows (corpus columns + cosine score ``out``
         + ``out_rank``).  ``corpus_filter`` restricts retrieval to
         matching corpus docs; the optimizer's ``prune_corpus`` rewrite
-        then embeds only those (identical rows, fewer embed requests)."""
+        then embeds only those (identical rows, fewer embed requests).
+
+        ``ann`` opts the scan into IVF approximate search: ``"ivf"``
+        forces it, ``"auto"`` lets the optimizer price the probed-list
+        FLOPs against the exact scan and pick per node (choice and
+        estimated recall render in ``explain()``), ``"exact"`` pins the
+        exact scan while still rendering both frontiers.
+        ``recall_target`` (default 0.95) sizes ``nprobe`` when it is not
+        given explicitly; ``nlist`` overrides the ~sqrt(N) quantizer."""
         return self._add_retrieval("vector_topk", dict(
             out=out, model=model, query_col=query_col, corpus=corpus,
             k=k, doc_col=doc_col, corpus_filter=corpus_filter,
             corpus_filter_cols=(None if corpus_filter_cols is None
                                 else list(corpus_filter_cols)),
-            cols=[query_col]))
+            cols=[query_col],
+            **self._ann_info(ann, recall_target, nprobe, nlist)))
 
     def bm25_topk(self, out: str, query_col: str, corpus: Table, k: int,
                   doc_col: str = "text", corpus_filter=None,
@@ -266,20 +305,27 @@ class Pipeline:
     def hybrid_topk(self, out: str, model, query_col: str, corpus: Table,
                     k: int, fusion: str = "rrf", doc_col: str = "text",
                     candidate_k: Optional[int] = None, corpus_filter=None,
-                    corpus_filter_cols: Optional[Sequence[str]] = None):
+                    corpus_filter_cols: Optional[Sequence[str]] = None,
+                    ann: Optional[str] = None,
+                    recall_target: Optional[float] = None,
+                    nprobe: Optional[int] = None,
+                    nlist: Optional[int] = None):
         """Paper Query 3 steps 2-4 as one plan node: vector + BM25
         retrievers at per-retriever depth ``candidate_k``, fused with
         ``core.fusion`` (Table 1: rrf/combsum/...), final top-``k`` by
         fused score.  ``candidate_k=None`` lets the engine choose the
         depth: full candidate lists unoptimized, ``k`` pushed down to
-        ``max(32, 4k)`` per retriever by the optimizer."""
+        ``max(32, 4k)`` per retriever by the optimizer.  The ``ann``
+        options (see ``vector_topk``) apply to the vector retriever;
+        BM25 always scans its postings exactly."""
         return self._add_retrieval("hybrid_topk", dict(
             out=out, model=model, query_col=query_col, corpus=corpus,
             k=k, fusion=fusion, doc_col=doc_col, candidate_k=candidate_k,
             corpus_filter=corpus_filter,
             corpus_filter_cols=(None if corpus_filter_cols is None
                                 else list(corpus_filter_cols)),
-            cols=[query_col]))
+            cols=[query_col],
+            **self._ann_info(ann, recall_target, nprobe, nlist)))
 
     # ---- semantic aggregates ---------------------------------------------------
     def llm_rerank(self, model, prompt, cols: Sequence[str],
@@ -551,6 +597,13 @@ class Pipeline:
                 if est.get("scan_flops"):
                     est_s += f" scan_flops={est['scan_flops']:.2e}"
                 est_s += "]"
+            ann = est.get("ann") if est else None
+            if ann:
+                est_s += (f" ann[{ann['choice']} nlist={ann['nlist']} "
+                          f"nprobe={ann['nprobe']} "
+                          f"est_recall={ann['recall_est']:.2f} "
+                          f"ivf_flops={ann['ivf_flops']:.2e} "
+                          f"exact_flops={ann['exact_flops']:.2e}]")
             lines.append(f"  [{i}] {node.op:18s} {info}{est_s}")
             if node.report_slot is not None:
                 self._render_report(lines, node.report_slot)

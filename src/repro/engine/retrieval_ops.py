@@ -181,9 +181,23 @@ def _vector_candidates(ctx: SemanticContext, info: dict,
     fp = None if pruned else info.get("corpus_fp")
     index, qv = _embed_corpus_and_queries(ctx, info["model"], texts,
                                           queries, fp)
+    # ANN routing: the optimizer's ann_select resolution wins; a forced
+    # ann="ivf" is honoured even on an unoptimized plan; "auto" without
+    # a resolution stays exact (result-preserving default).  The masked
+    # unpruned-predicate branch always scans exactly — its full ranking
+    # feeds the mask.
+    ann = info.get("ann_resolved") or (
+        "ivf" if info.get("ann") == "ivf" else "exact")
     out: List[Tuple[List[int], List[float]]] = []
     if full or pruned:
-        s, li = index.topk(qv, min(depth, len(texts)))
+        if ann == "ivf":
+            s, li = index.topk_ann(
+                qv, min(depth, len(texts)),
+                nprobe=info.get("ann_nprobe", info.get("nprobe")),
+                nlist=info.get("ann_nlist", info.get("nlist")),
+                recall_target=info.get("recall_target"))
+        else:
+            s, li = index.topk(qv, min(depth, len(texts)))
         for r in range(len(queries)):
             ids = ([sel[int(j)] for j in li[r]] if pruned
                    else [int(j) for j in li[r]])
@@ -208,11 +222,10 @@ def _bm25_candidates(info: dict, queries: List[str], sel: List[int],
     if bm is None:
         bm = info["_bm25"] = BM25Index.build(
             [str(x) for x in info["corpus"].column(info["doc_col"])])
-    out = []
-    for q in queries:
-        ids, s = _ranked(bm.score(str(q)), sel, depth)
-        out.append((ids, s))
-    return out
+    # all pending queries score in ONE vectorized pass over the
+    # postings (bit-identical rows to per-query score(), see bm25.py)
+    scores = bm.score_many([str(q) for q in queries])
+    return [_ranked(scores[i], sel, depth) for i in range(len(queries))]
 
 
 def _candidates(ctx: SemanticContext, op: str, info: dict,

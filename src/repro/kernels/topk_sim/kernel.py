@@ -13,6 +13,19 @@ the naive cost; the kernel instead:
 
 HBM traffic: one streaming pass over the corpus + k*block_n rescore reads,
 vs 1 pass + (N, Q) writes + (N, Q) reads for the naive scan.
+
+Layout (what makes the COMPILED path lowerable, not just the
+interpreter): each grid step consumes ``block_t`` consecutive sub-blocks
+of ``block_n`` corpus rows and writes ONE (Q_pad, block_t) output tile.
+With the defaults (block_n=64, block_t=128) the output tile's lane
+dimension is the 128 the MXU/VPU tiling wants, queries pad to the f32
+sublane multiple of 8, and the per-step corpus slab is
+block_t*block_n*D*4 bytes (2 MiB at D=64) — VMEM-sized with room for
+double buffering.  The old layout wrote (Q, 1) tiles, which TPU tiling
+rejects; it only ever ran interpreted.
+
+``interpret=None`` resolves per backend: compiled on TPU/GPU, the
+interpreter fallback on CPU (where no Pallas lowering exists).
 """
 
 from __future__ import annotations
@@ -26,35 +39,56 @@ from jax.experimental import pallas as pl
 F32 = jnp.float32
 
 
-def _blockmax_kernel(c_ref, q_ref, o_ref, *, n_valid: int, block_n: int):
-    bi = pl.program_id(0)
-    c = c_ref[...]                                   # (bn, D)
-    q = q_ref[...]                                   # (Q, D)
+def resolve_interpret(interpret):
+    """Backend-aware default: compiled wherever a Pallas lowering
+    exists, interpreter on CPU."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+def _blockmax_kernel(c_ref, q_ref, o_ref, *, n_valid: int, block_n: int,
+                     block_t: int):
+    ti = pl.program_id(0)
+    c = c_ref[...]                                   # (block_t*block_n, D)
+    q = q_ref[...]                                   # (Q_pad, D)
     s = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
-                            preferred_element_type=F32)   # (Q, bn)
-    idx = bi * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+                            preferred_element_type=F32)  # (Q, bt*bn)
+    idx = (ti * block_t * block_n
+           + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
     s = jnp.where(idx < n_valid, s, -jnp.inf)
-    o_ref[...] = s.max(axis=1, keepdims=True)
+    qp = s.shape[0]
+    o_ref[...] = s.reshape(qp, block_t, block_n).max(axis=2)
 
 
-def block_max_scores(corpus, queries, *, block_n: int = 1024,
-                     interpret: bool = True):
-    """corpus: (N, D); queries: (Q, D) -> (Q, n_blocks) per-block maxima."""
+def block_max_scores(corpus, queries, *, block_n: int = 64,
+                     block_t: int = 128, interpret=None):
+    """corpus: (N, D); queries: (Q, D) -> (Q, n_blocks) per-block maxima
+    over sub-blocks of ``block_n`` rows (padded blocks report -inf)."""
+    interpret = resolve_interpret(interpret)
     N, D = corpus.shape
     Q = queries.shape[0]
-    pad = (-N) % block_n
+    n_sub = -(-N // block_n)
+    block_t = max(1, min(block_t, n_sub))
+    chunk = block_n * block_t
+    pad = (-N) % chunk
     if pad:
         corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
-    n_blocks = corpus.shape[0] // block_n
-    kernel = functools.partial(_blockmax_kernel, n_valid=N, block_n=block_n)
-    return pl.pallas_call(
+    qpad = (-Q) % 8                                  # f32 sublane multiple
+    qp = jnp.pad(queries, ((0, qpad), (0, 0))) if qpad else queries
+    grid = corpus.shape[0] // chunk
+    n_blocks = grid * block_t
+    kernel = functools.partial(_blockmax_kernel, n_valid=N,
+                               block_n=block_n, block_t=block_t)
+    out = pl.pallas_call(
         kernel,
-        grid=(n_blocks,),
+        grid=(grid,),
         in_specs=[
-            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
-            pl.BlockSpec((Q, D), lambda i: (0, 0)),
+            pl.BlockSpec((chunk, D), lambda i: (i, 0)),
+            pl.BlockSpec((Q + qpad, D), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((Q, 1), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((Q, n_blocks), F32),
+        out_specs=pl.BlockSpec((Q + qpad, block_t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((Q + qpad, n_blocks), F32),
         interpret=interpret,
-    )(corpus, queries)
+    )(corpus, qp)
+    return out[:Q]

@@ -12,16 +12,23 @@ from .kernel import block_max_scores
 F32 = jnp.float32
 
 
-@partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
-def topk_sim(corpus, queries, k: int, *, block_n: int = 1024,
-             interpret: bool = True):
+@partial(jax.jit,
+         static_argnames=("k", "block_n", "block_t", "interpret"))
+def topk_sim(corpus, queries, k: int, *, block_n: int = 64,
+             block_t: int = 128, interpret=None):
     """Exact cosine top-k via block-max pruning.
 
     corpus: (N, D) (normalised inside); queries: (Q, D).
     Returns (scores (Q, k), indices (Q, k)), exact (see kernel.py proof).
-    """
+    ``k`` is capped at N; an empty corpus returns empty (Q, 0) results.
+    ``interpret=None`` resolves per backend (compiled on TPU/GPU,
+    interpreter on CPU)."""
     N, D = corpus.shape
     Q = queries.shape[0]
+    k = min(k, N)
+    if N == 0 or k == 0 or Q == 0:
+        return (jnp.zeros((Q, min(k, N)), F32),
+                jnp.zeros((Q, min(k, N)), jnp.int32))
     block_n = min(block_n, max(N, 8))
     cn = corpus / jnp.maximum(
         jnp.linalg.norm(corpus, axis=-1, keepdims=True), 1e-9)
@@ -29,8 +36,8 @@ def topk_sim(corpus, queries, k: int, *, block_n: int = 1024,
         jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
     qn = qn.astype(cn.dtype)
 
-    bmax = block_max_scores(cn, qn, block_n=block_n,
-                            interpret=interpret)          # (Q, n_blocks)
+    bmax = block_max_scores(cn, qn, block_n=block_n, block_t=block_t,
+                            interpret=interpret)     # (Q, n_blocks)
     n_blocks = bmax.shape[1]
     kb = min(k, n_blocks)
     _, top_blocks = jax.lax.top_k(bmax, kb)               # (Q, kb)

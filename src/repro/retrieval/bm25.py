@@ -69,6 +69,41 @@ class BM25Index:
             np.add.at(scores, docs, s * qf)
         return scores
 
+    def score_many(self, queries: Sequence[str]) -> np.ndarray:
+        """BM25 scores for a batch of queries in one vectorized pass:
+        (len(queries), n_docs).
+
+        Each term's per-doc score array is query-independent, so it is
+        computed once per distinct term and scattered for every query
+        that uses it with a single ``np.add.at``.  Scatter pairs are
+        emitted in (query, per-query term) order — the same float
+        accumulation order as ``score`` — so rows are bit-identical to
+        the per-query path.
+        """
+        nq = len(queries)
+        out = np.zeros((nq, self._n_docs), np.float64)
+        if not self._n_docs or not nq:
+            return out
+        norm = 1.0 - self.b + self.b * self._doc_len / max(self._avgdl, 1e-9)
+        term_scores: Dict[str, np.ndarray] = {}
+        rows, cols, vals = [], [], []
+        for qi, query in enumerate(queries):
+            for term, qf in Counter(tokenize(str(query))).items():
+                if term not in self._postings:
+                    continue
+                if term not in term_scores:
+                    docs, tf = self._postings[term]
+                    term_scores[term] = self.idf(term) * tf * (
+                        self.k1 + 1.0) / (tf + self.k1 * norm[docs])
+                docs = self._postings[term][0]
+                rows.append(np.full(len(docs), qi, np.int64))
+                cols.append(docs)
+                vals.append(term_scores[term] * qf)
+        if rows:
+            np.add.at(out, (np.concatenate(rows), np.concatenate(cols)),
+                      np.concatenate(vals))
+        return out
+
     def topk(self, query: str, k: int = 100):
         scores = self.score(query)
         k = min(k, self._n_docs)

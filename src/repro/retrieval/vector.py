@@ -5,14 +5,27 @@ corpus-side scan is a blocked matmul with a running top-k, sharded over the
 (data, model) mesh when a policy is supplied.
 
 ``VectorIndex`` is the materialised index behind the ``vector_topk`` /
-``hybrid_topk`` plan operators (``engine.retrieval_ops``): built indexes
-are memoised per session and in the persistent ``IndexStore`` sidecar via
-``ensure_index``, keyed by (embedding model ref, corpus fingerprint), so a
-repeated RAG query over an unchanged corpus skips re-embedding.  When a
-JAX mesh with more than one device is active (an enclosing ``with mesh:``
-block, or an explicit ``mesh=`` argument), the corpus scan routes through
-``distributed.sharded_topk`` — corpus rows shard over the mesh, queries
-replicate, and only (Q, devices*k) candidates all-gather.
+``hybrid_topk`` plan operators (``engine.retrieval_ops``).  Scan routing:
+
+  * >1-device mesh active (enclosing ``with mesh:`` or ``mesh=``) — the
+    shard-mapped ``distributed.sharded_topk`` blocked scan; corpus rows
+    shard, queries replicate, only (Q, devices*k) candidates all-gather.
+  * single device, compiled backend (TPU/GPU) or a large corpus — the
+    ``kernels/topk_sim`` block-max Pallas kernel (compiled on
+    accelerators, interpreted on CPU where only big scans amortise the
+    interpreter overhead).
+  * otherwise — the ``cosine_topk`` jnp scan.
+
+``topk_ann`` routes through a lazily built ``retrieval.ivf.IVFIndex``
+(the ``vector_topk(ann=...)`` plan option); ``nprobe >= nlist`` probes
+everything and reproduces the exact scan.
+
+Built indexes are memoised per session and in the persistent
+``IndexStore`` sidecar via ``ensure_index``, keyed by (embedding model
+ref, corpus fingerprint).  A corpus that *extends* a memoised one is an
+incremental append: only the delta is embedded (through the same
+``plan_batches``/co-pack path as any embed) and stored as a new segment
+next to the base instead of re-embedding the whole corpus.
 """
 
 from __future__ import annotations
@@ -23,14 +36,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .ivf import IVFIndex
+
+# On CPU the Pallas kernel runs interpreted; its per-call overhead only
+# amortises over big corpora, so small scans keep the jnp path (which is
+# also what the equivalence tests pin bit-for-bit on CPU).
+KERNEL_MIN_ROWS_CPU = 32768
+DEFAULT_RECALL_TARGET = 0.95
+
 
 def cosine_topk(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
                 block: int = 4096):
     """corpus: (N, D) unit-normalised; queries: (Q, D).  Returns
     (scores (Q,k), indices (Q,k)) by cosine similarity, blocked over N so the
-    full (N, Q) score matrix is never materialised."""
+    full (N, Q) score matrix is never materialised.  ``k`` is capped at N;
+    an empty corpus returns empty (Q, 0) results."""
     N, D = corpus.shape
     Q = queries.shape[0]
+    k = min(k, N)
+    if N == 0 or k == 0:
+        return (jnp.zeros((Q, 0), jnp.float32),
+                jnp.zeros((Q, 0), jnp.int32))
     qn = queries / jnp.maximum(
         jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-9)
     block = min(block, N)
@@ -77,17 +103,24 @@ def active_mesh():
 class VectorIndex:
     """Materialised embedding index over a column of texts.
 
-    ``topk`` scans single-device by default; with a mesh active (or
-    passed explicitly) the scan shards the corpus rows over the mesh via
-    ``distributed.sharded_topk``."""
+    ``topk`` is the exact scan (mesh-sharded / Pallas / jnp — see module
+    docstring); ``topk_ann`` the IVF approximate scan.  ``raw`` keeps the
+    pre-normalisation vectors so segment appends (``extended``) rebuild
+    bit-identically to a from-scratch index over the full corpus."""
 
-    def __init__(self, vectors: np.ndarray, mesh=None):
+    def __init__(self, vectors: np.ndarray, mesh=None,
+                 use_kernel: Optional[bool] = None):
         v = np.asarray(vectors, np.float32)
+        if v.ndim == 1:
+            v = v.reshape(0, 0) if v.size == 0 else v.reshape(1, -1)
+        self.raw = v
         norms = np.maximum(np.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
         self.vectors = v / norms
         self.mesh = mesh
+        self.use_kernel = use_kernel
         self._topk = jax.jit(cosine_topk, static_argnames=("k", "block"))
         self._sharded = {}          # k -> bound sharded scan
+        self._ivf: Optional[IVFIndex] = None
 
     @classmethod
     def build(cls, ctx, model_spec, texts: Sequence[str],
@@ -103,17 +136,110 @@ class VectorIndex:
             fn = self._sharded[key] = make_sharded_topk(mesh, k)
         return fn
 
+    def _route_kernel(self) -> bool:
+        if self.use_kernel is not None:
+            return self.use_kernel
+        if jax.default_backend() != "cpu":
+            return True
+        return len(self.vectors) >= KERNEL_MIN_ROWS_CPU
+
     def topk(self, query_vecs: np.ndarray, k: int = 100):
         q = np.atleast_2d(np.asarray(query_vecs, np.float32))
         use_k = min(k, len(self.vectors))
+        if use_k <= 0 or q.shape[-1] == 0:
+            return (np.zeros((len(q), 0), np.float32),
+                    np.zeros((len(q), 0), np.int32))
         mesh = self.mesh if self.mesh is not None else active_mesh()
         if mesh is not None:
             fn = self._sharded_topk(mesh, use_k)
             s, i = fn(jnp.asarray(self.vectors), jnp.asarray(q))
+        elif self._route_kernel():
+            from repro.kernels.topk_sim.ops import topk_sim
+            s, i = topk_sim(jnp.asarray(self.vectors), jnp.asarray(q),
+                            use_k)
         else:
             s, i = self._topk(jnp.asarray(self.vectors), jnp.asarray(q),
                               use_k)
         return np.asarray(s), np.asarray(i)
+
+    # ---- ANN -------------------------------------------------------------
+    def ivf(self, nlist: Optional[int] = None) -> IVFIndex:
+        """The lazily built (and memoised) IVF index over this corpus.
+        An explicit ``nlist`` differing from the memoised quantizer
+        rebuilds it."""
+        if self._ivf is None or (
+                nlist is not None and self._ivf.nlist != min(
+                    max(int(nlist), 1), len(self.vectors))):
+            self._ivf = IVFIndex.build(self.vectors, nlist)
+        return self._ivf
+
+    def topk_ann(self, query_vecs: np.ndarray, k: int = 100, *,
+                 nprobe: Optional[int] = None,
+                 nlist: Optional[int] = None,
+                 recall_target: Optional[float] = None):
+        """IVF approximate top-k.  ``nprobe`` wins over ``recall_target``
+        (which picks the smallest calibrated nprobe meeting the target);
+        ``nprobe >= nlist`` reproduces the exact scan."""
+        q = np.atleast_2d(np.asarray(query_vecs, np.float32))
+        use_k = min(k, len(self.vectors))
+        if use_k <= 0 or q.shape[-1] == 0:
+            return (np.zeros((len(q), 0), np.float32),
+                    np.zeros((len(q), 0), np.int64))
+        qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        ivf = self.ivf(nlist)
+        if nprobe is None:
+            nprobe = ivf.nprobe_for(recall_target
+                                    if recall_target is not None
+                                    else DEFAULT_RECALL_TARGET)
+        return ivf.search(qn, use_k, nprobe)
+
+    # ---- incremental appends ---------------------------------------------
+    def extended(self, delta_vectors: np.ndarray) -> "VectorIndex":
+        """A NEW index over this corpus plus ``delta_vectors`` (raw,
+        un-normalised — same as ``llm_embedding`` output).  The base
+        index is untouched (it stays registered under its own
+        fingerprint); a built IVF quantizer carries over with the new
+        rows assigned to existing lists (merged lazily)."""
+        delta = np.asarray(delta_vectors, np.float32)
+        if delta.ndim == 1 and delta.size:
+            delta = delta.reshape(1, -1)
+        if not delta.size:
+            return self
+        idx = VectorIndex(np.concatenate([self.raw, delta]),
+                          mesh=self.mesh, use_kernel=self.use_kernel)
+        if self._ivf is not None:
+            idx._ivf = self._ivf.extended(idx.vectors, len(delta))
+        return idx
+
+
+def _find_prefix_base(ctx, store, model_ref: str, texts):
+    """An existing index over a strict prefix of ``texts``: returns
+    ``(n_base, base_fp, base_index_or_None, base_vectors_or_None)`` for
+    the LONGEST matching prefix, or None.  Candidates come from the
+    session registry and the ``IndexStore``; a candidate of length n
+    matches iff ``corpus_fingerprint(texts[:n])`` equals its key."""
+    from repro.core.cache import corpus_fingerprint
+
+    lengths = {}                       # n -> [fp, ...] candidates
+    for fp, n in getattr(ctx, "index_entries", lambda _ref: [])(model_ref):
+        if 0 < n < len(texts):
+            lengths.setdefault(n, []).append(fp)
+    if store is not None:
+        for fp, n in store.entries(model_ref):
+            if 0 < n < len(texts):
+                lengths.setdefault(n, []).append(fp)
+    for n in sorted(lengths, reverse=True):
+        fp_n = corpus_fingerprint(texts[:n])
+        if fp_n not in lengths[n]:
+            continue
+        index = ctx.lookup_index((model_ref, fp_n))
+        if index is not None and len(index.vectors) == n:
+            return n, fp_n, index, None
+        if store is not None:
+            vectors = store.get(model_ref, fp_n)
+            if vectors is not None and len(vectors) == n:
+                return n, fp_n, None, vectors
+    return None
 
 
 def ensure_index(ctx, model_spec, texts: Sequence[str],
@@ -121,10 +247,12 @@ def ensure_index(ctx, model_spec, texts: Sequence[str],
     """Build-or-fetch the vector index for (embedding model, corpus).
 
     Lookup order: the context's session registry, then the persistent
-    ``IndexStore`` sidecar, then a fresh ``llm_embedding`` build (which
-    populates both).  Returns ``(index, source)`` with source one of
-    ``"session"`` / ``"store"`` / ``"built"`` — the dedupe path behind
-    the optimizer's shared-corpus cost estimate."""
+    ``IndexStore`` sidecar, then — new in the segment era — a memoised
+    index over a strict PREFIX of this corpus, in which case only the
+    delta texts are embedded (the same ``plan_batches``/co-pack path as
+    a full build) and persisted as an appended segment.  Returns
+    ``(index, source)`` with source one of ``"session"`` / ``"store"`` /
+    ``"appended"`` / ``"built"``."""
     from repro.core.cache import corpus_fingerprint
     from repro.core.functions import llm_embedding
 
@@ -143,6 +271,23 @@ def ensure_index(ctx, model_spec, texts: Sequence[str],
             index = VectorIndex(vectors)
             ctx.store_index(key, index)
             return index, "store"
+
+    base = _find_prefix_base(ctx, store, model.ref, texts)
+    if base is not None:
+        n_base, base_fp, base_index, base_vectors = base
+        delta = llm_embedding(ctx, model_spec, texts[n_base:])
+        if base_index is None:
+            base_index = VectorIndex(base_vectors)
+        index = base_index.extended(delta)
+        ctx.store_index(key, index)
+        if store is not None:
+            if store.has(model.ref, base_fp):
+                store.append_segment(model.ref, base_fp, fingerprint,
+                                     delta)
+            else:
+                store.put(model.ref, fingerprint, index.raw)
+        return index, "appended"
+
     vectors = llm_embedding(ctx, model_spec, texts)
     index = VectorIndex(vectors)
     ctx.store_index(key, index)

@@ -1,0 +1,428 @@
+"""IVF-ANN contracts (ISSUE 7): the approximate scan's correctness
+envelope, incremental index maintenance, and the plan-level wiring.
+
+  * ``nprobe == nlist`` is BIT-IDENTICAL to the exact scan (same numpy
+    scorer by construction) — property-based over shapes/seeds;
+  * recall@k meets the requested target on clustered corpora (seeded);
+  * an incremental append equals the from-scratch rebuild bit-for-bit
+    and embeds ONLY the delta (request/tuple counts asserted);
+  * ``IndexStore`` segments: append persists only the delta, reloads
+    concatenate exactly, eviction garbage-collects unreferenced
+    segments (no orphaned sidecar payloads);
+  * plan level: ``ann="ivf"`` with full probing matches the exact plan,
+    ``ann="auto"`` picks IVF on big corpora and exact on small ones,
+    ``explain()`` renders both priced frontiers and the ann_select
+    rewrite;
+  * ``BM25Index.score_many`` is bit-identical to per-query ``score``.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import MockProvider, PredictionCache, SemanticContext
+from repro.core.cache import IndexStore, corpus_fingerprint
+from repro.engine import Pipeline, Table
+from repro.retrieval import BM25Index, IVFIndex, VectorIndex, ensure_index
+from repro.retrieval.ivf import (default_nlist, ivf_scan_flops, kmeans,
+                                 planned_nprobe, planned_recall)
+
+EMB = {"model": "e", "embedding_dim": 16, "context_window": 4096}
+
+
+def clustered(rng, n, d=24, centers=8):
+    """Mixture-of-Gaussians corpus: the clustered geometry IVF exploits."""
+    mu = rng.standard_normal((centers, d)) * 4.0
+    labels = rng.integers(0, centers, n)
+    return (mu[labels] + rng.standard_normal((n, d))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# IVF index contracts
+# ---------------------------------------------------------------------------
+def test_ivf_full_probe_bit_identical_to_exact():
+    rng = np.random.default_rng(0)
+    for n, d, nlist, q, k in ((200, 8, 14, 5, 10), (64, 4, 8, 3, 64),
+                              (33, 16, 33, 2, 1), (500, 12, 22, 7, 17)):
+        vs = clustered(rng, n, d)
+        vs /= np.maximum(np.linalg.norm(vs, axis=1, keepdims=True), 1e-9)
+        idx = IVFIndex.build(vs, nlist)
+        qs = rng.standard_normal((q, d)).astype(np.float32)
+        qs /= np.maximum(np.linalg.norm(qs, axis=1, keepdims=True), 1e-9)
+        s_ex, i_ex = idx.exact_scan(qs, min(k, n))
+        s, i = idx.search(qs, min(k, n), nprobe=idx.nlist)
+        assert s.tobytes() == s_ex.tobytes()
+        assert i.tobytes() == i_ex.tobytes()
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(2, 120), d=st.integers(2, 12),
+           k=st.integers(1, 20), seed=st.integers(0, 10_000))
+    def test_ivf_full_probe_bit_identical_property(n, d, k, seed):
+        rng = np.random.default_rng(seed)
+        vs = rng.standard_normal((n, d)).astype(np.float32)
+        vs /= np.maximum(np.linalg.norm(vs, axis=1, keepdims=True), 1e-9)
+        idx = IVFIndex.build(vs)
+        qs = rng.standard_normal((3, d)).astype(np.float32)
+        qs /= np.maximum(np.linalg.norm(qs, axis=1, keepdims=True), 1e-9)
+        kk = min(k, n)
+        s_ex, i_ex = idx.exact_scan(qs, kk)
+        s, i = idx.search(qs, kk, nprobe=idx.nlist)
+        assert s.tobytes() == s_ex.tobytes()
+        assert i.tobytes() == i_ex.tobytes()
+except ImportError:                          # pragma: no cover
+    pass
+
+
+def test_ivf_recall_meets_target_on_clustered_corpus():
+    rng = np.random.default_rng(7)
+    vs = clustered(rng, 4000, d=24, centers=16)
+    vs /= np.maximum(np.linalg.norm(vs, axis=1, keepdims=True), 1e-9)
+    idx = IVFIndex.build(vs)
+    # queries near corpus points (the RAG regime: query embeds live in
+    # the same space as passage embeds)
+    qs = vs[rng.integers(0, len(vs), 32)] + \
+        0.05 * rng.standard_normal((32, 24)).astype(np.float32)
+    qs /= np.maximum(np.linalg.norm(qs, axis=1, keepdims=True), 1e-9)
+    target = 0.95
+    nprobe = idx.nprobe_for(target)
+    assert nprobe < idx.nlist                  # calibrated: partial probe
+    _, i_ex = idx.exact_scan(qs, 10)
+    _, i = idx.search(qs, 10, nprobe=nprobe)
+    hits = np.mean([len(set(a) & set(b)) / 10.0
+                    for a, b in zip(i, i_ex)])
+    assert hits >= target
+
+
+def test_ivf_incremental_append_equals_rebuild():
+    rng = np.random.default_rng(3)
+    vs = clustered(rng, 600, d=16)
+    vs /= np.maximum(np.linalg.norm(vs, axis=1, keepdims=True), 1e-9)
+    base = IVFIndex.build(vs[:500])
+    ext = base.extended(vs, 100)
+    assert ext.nlist == base.nlist             # centroids shared
+    qs = rng.standard_normal((6, 16)).astype(np.float32)
+    qs /= np.maximum(np.linalg.norm(qs, axis=1, keepdims=True), 1e-9)
+    # full probing: appended index == exact scan over the grown corpus,
+    # bit-for-bit — no candidate lost in the lazy merge
+    s, i = ext.search(qs, 12, nprobe=ext.nlist)
+    s_ex, i_ex = ext.exact_scan(qs, 12)
+    assert s.tobytes() == s_ex.tobytes() and i.tobytes() == i_ex.tobytes()
+    # partial probing still covers every appended row's list
+    _, i_part = ext.search(qs, 12, nprobe=max(1, ext.nlist // 2))
+    assert i_part.shape == (6, 12)
+
+
+def test_planning_prior_shapes():
+    assert planned_recall(10, 10) == 1.0
+    assert planned_nprobe(316, 0.95) < 316 * 0.15
+    assert planned_recall(planned_nprobe(316, 0.95), 316) >= 0.95
+    assert default_nlist(100_000) == 316
+    # probe flops strictly below exact at partial probing
+    assert ivf_scan_flops(4, 100_000, 64, 316, 29) < \
+        2.0 * 4 * 100_000 * 64
+    # degenerate corpora
+    assert default_nlist(0) >= 1
+    km = kmeans(np.ones((3, 4), np.float32), 2)
+    assert km.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# cosine_topk / VectorIndex edge guards + routing
+# ---------------------------------------------------------------------------
+def test_cosine_topk_k_exceeds_corpus_and_empty():
+    import jax.numpy as jnp
+    from repro.retrieval import cosine_topk
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    s, i = cosine_topk(c, q, 9)                # k > N: capped, no raise
+    assert s.shape == (2, 4)
+    s, i = cosine_topk(jnp.zeros((0, 8), jnp.float32), q, 3)
+    assert s.shape == (2, 0) and i.shape == (2, 0)
+
+
+def test_vector_index_empty_and_k_cap():
+    vi = VectorIndex(np.zeros((0, 0), np.float32))
+    s, i = vi.topk(np.zeros((2, 8), np.float32), 5)
+    assert s.shape == (2, 0)
+    vi2 = VectorIndex(np.random.default_rng(0)
+                      .standard_normal((3, 8)).astype(np.float32))
+    s, i = vi2.topk(np.random.default_rng(1)
+                    .standard_normal((2, 8)).astype(np.float32), 10)
+    assert s.shape == (2, 3)
+
+
+def test_vector_index_kernel_route_matches_jnp():
+    rng = np.random.default_rng(0)
+    vs = rng.standard_normal((300, 16)).astype(np.float32)
+    q = rng.standard_normal((4, 16)).astype(np.float32)
+    jnp_s, jnp_i = VectorIndex(vs, use_kernel=False).topk(q, 7)
+    ker_s, ker_i = VectorIndex(vs, use_kernel=True).topk(q, 7)
+    np.testing.assert_allclose(ker_s, jnp_s, atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(ker_i, jnp_i)
+
+
+# ---------------------------------------------------------------------------
+# incremental ensure_index: delta-only embeds
+# ---------------------------------------------------------------------------
+def _texts(n):
+    return [f"passage {i} about topic {i % 9} with searchable body"
+            for i in range(n)]
+
+
+def _embedded(ctx):
+    return sum(r.n_tuples for r in ctx.reports
+               if r.function == "embedding")
+
+
+def test_ensure_index_append_embeds_only_delta():
+    texts = _texts(40)
+    ctx = SemanticContext(provider=MockProvider(), enable_cache=False)
+    idx_base, src = ensure_index(ctx, EMB, texts[:30])
+    assert src == "built"
+    assert _embedded(ctx) == 30
+    base_calls = ctx.provider.stats.calls
+
+    idx, src = ensure_index(ctx, EMB, texts)
+    assert src == "appended"
+    assert _embedded(ctx) == 40                # +10, the delta ONLY
+    assert ctx.provider.stats.calls > base_calls
+
+    # bit-identical to a from-scratch build over the full corpus
+    ctx2 = SemanticContext(provider=MockProvider(), enable_cache=False)
+    idx_full, _ = ensure_index(ctx2, EMB, texts)
+    np.testing.assert_array_equal(idx.raw, idx_full.raw)
+    np.testing.assert_array_equal(idx.vectors, idx_full.vectors)
+    # the base index object is untouched
+    assert len(idx_base.vectors) == 30
+    # and the grown corpus is now registered: third call is a session hit
+    _, src3 = ensure_index(ctx, EMB, texts)
+    assert src3 == "session"
+
+
+def test_ensure_index_append_across_sessions_via_store(tmp_path):
+    texts = _texts(24)
+    store_path = str(tmp_path / "cache.jsonl.index.json")
+    ctx1 = SemanticContext(provider=MockProvider(), enable_cache=False,
+                           index_path=store_path)
+    ensure_index(ctx1, EMB, texts[:20])
+
+    # new session: base comes from the sidecar, only the delta embeds
+    ctx2 = SemanticContext(provider=MockProvider(), enable_cache=False,
+                           index_path=store_path)
+    idx, src = ensure_index(ctx2, EMB, texts)
+    assert src == "appended"
+    assert _embedded(ctx2) == 4
+    # the sidecar recorded the grown corpus as base + delta segment
+    store = IndexStore(store_path)
+    model_ref = ctx2.resolve_model(EMB).ref
+    fps = dict(store.entries(model_ref))
+    assert fps[corpus_fingerprint(texts)] == 24
+    assert len(store.segment_keys()) == 2      # base chain + delta
+    np.testing.assert_array_equal(
+        store.get(model_ref, corpus_fingerprint(texts)), idx.raw)
+
+    # a third session over the grown corpus pays ZERO embeds
+    ctx3 = SemanticContext(provider=MockProvider(), enable_cache=False,
+                           index_path=store_path)
+    _, src3 = ensure_index(ctx3, EMB, texts)
+    assert src3 == "store"
+    assert ctx3.provider.stats.calls == 0
+
+
+# ---------------------------------------------------------------------------
+# IndexStore segment lifecycle
+# ---------------------------------------------------------------------------
+def test_index_store_segment_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((5, 4)).astype(np.float32)
+    delta = rng.standard_normal((3, 4)).astype(np.float32)
+    path = str(tmp_path / "idx.json")
+    st = IndexStore(path)
+    st.put("m@1", "fpA", base)
+    assert st.append_segment("m@1", "fpA", "fpB", delta)
+    np.testing.assert_array_equal(st.get("m@1", "fpB"),
+                                  np.concatenate([base, delta]))
+    assert st.entries("m@1") == [("fpA", 5), ("fpB", 8)]
+    # reload: segments concatenate exactly; base still whole
+    st2 = IndexStore(path)
+    np.testing.assert_array_equal(st2.get("m@1", "fpB"),
+                                  np.concatenate([base, delta]))
+    np.testing.assert_array_equal(st2.get("m@1", "fpA"), base)
+    # append with an unknown base is refused (caller falls back to put)
+    assert not st2.append_segment("m@1", "nope", "fpC", delta)
+
+
+def test_index_store_eviction_garbage_collects_segments(tmp_path):
+    rng = np.random.default_rng(1)
+    base = rng.standard_normal((4, 3)).astype(np.float32)
+    delta = rng.standard_normal((2, 3)).astype(np.float32)
+    path = str(tmp_path / "idx.json")
+    st = IndexStore(path, capacity=2)
+    st.put("m@1", "f1", base)
+    st.append_segment("m@1", "f1", "f2", delta)
+    # f1's segment is SHARED with f2's chain: evicting f1 must keep it
+    st.put("m@1", "f3", base)                  # evicts f1 (oldest)
+    assert not st.has("m@1", "f1") and st.has("m@1", "f2")
+    np.testing.assert_array_equal(st.get("m@1", "f2"),
+                                  np.concatenate([base, delta]))
+    assert len(st.segment_keys()) == 2
+    # evicting the whole chain frees every segment — on disk too
+    st.put("m@1", "f4", base)                  # evicts f2
+    assert st.segment_keys() == []
+    assert json.loads(open(path).read())["segments"] == {}
+
+
+def test_index_store_segmented_corruption_recovery(tmp_path):
+    path = tmp_path / "idx.json"
+    path.write_text(json.dumps({
+        "indexes": {
+            "ok|fp": {"segments": ["ok|fp#0"], "n": 1},
+            "dangling|fp": {"segments": ["missing#0"], "n": 2},
+            "legacy|fp": {"vectors": [[1.0, 2.0]]},
+        },
+        "segments": {"ok|fp#0": [[3.0, 4.0]],
+                     "orphan#9": [[9.9]]},
+    }))
+    st = IndexStore(str(path))
+    # dangling chains drop; orphan segments are GC'd; legacy loads
+    assert sorted(st.keys()) == ["legacy|fp", "ok|fp"]
+    assert st.segment_keys() == ["ok|fp#0"]
+    np.testing.assert_array_equal(st.get("ok|fp".split("|")[0], "fp"),
+                                  [[3.0, 4.0]])
+
+
+# ---------------------------------------------------------------------------
+# plan-level ANN
+# ---------------------------------------------------------------------------
+def _corpus(n):
+    return Table({"text": _texts(n)})
+
+
+def _queries():
+    return Table({"q": ["topic 3 body", "passage 17"]})
+
+
+def test_plan_forced_ivf_full_probe_matches_exact_plan():
+    ctx = SemanticContext(provider=MockProvider())
+    corpus = _corpus(120)
+    nlist = default_nlist(120)
+    exact = (Pipeline(ctx, _queries(), "queries")
+             .vector_topk("s", EMB, "q", corpus, k=5)
+             .collect())
+    ivf = (Pipeline(ctx, _queries(), "queries")
+           .vector_topk("s", EMB, "q", corpus, k=5, ann="ivf",
+                        nlist=nlist, nprobe=nlist)
+           .collect())
+    assert ivf.column("text") == exact.column("text")
+    np.testing.assert_allclose(ivf.column("s"), exact.column("s"),
+                               atol=1e-6)
+
+
+def test_plan_ann_auto_selects_by_corpus_size():
+    big = SemanticContext(provider=MockProvider())
+    pipe = (Pipeline(big, _queries(), "queries")
+            .vector_topk("s", EMB, "q", _corpus(2000), k=5, ann="auto"))
+    plan = pipe._plan()
+    node = [n for n in plan.nodes if n.op == "vector_topk"][0]
+    assert node.info["ann_resolved"] == "ivf"
+    assert node.info["ann_nprobe"] < node.info["ann_nlist"]
+    assert any(rw.startswith("ann_select") for rw in plan.rewrites)
+
+    small = SemanticContext(provider=MockProvider())
+    pipe2 = (Pipeline(small, _queries(), "queries")
+             .vector_topk("s", EMB, "q", _corpus(60), k=5, ann="auto"))
+    node2 = [n for n in pipe2._plan().nodes if n.op == "vector_topk"][0]
+    assert node2.info["ann_resolved"] == "exact"
+
+
+def test_plan_without_ann_unchanged():
+    ctx = SemanticContext(provider=MockProvider())
+    pipe = (Pipeline(ctx, _queries(), "queries")
+            .vector_topk("s", EMB, "q", _corpus(2000), k=5))
+    plan = pipe._plan()
+    assert not any(rw.startswith("ann_select") for rw in plan.rewrites)
+    assert "ann" not in pipe.nodes[1].info
+
+
+def test_explain_renders_both_scan_frontiers():
+    ctx = SemanticContext(provider=MockProvider())
+    pipe = (Pipeline(ctx, _queries(), "queries")
+            .vector_topk("s", EMB, "q", _corpus(2000), k=5, ann="auto"))
+    text = pipe.explain()
+    assert "ann[ivf" in text                   # optimized: IVF chosen
+    assert "ann[exact" in text                 # naive: exact frontier
+    assert "ivf_flops=" in text and "exact_flops=" in text
+    assert "est_recall=" in text
+    assert any(ln.strip().startswith("- ann_select")
+               for ln in text.splitlines())
+    # the optimized plan's priced scan is strictly cheaper
+    plan = pipe._plan()
+    naive = plan.naive_node_costs[1]["scan_flops"]
+    opt = plan.optimized_node_costs[1]["scan_flops"]
+    assert opt < naive
+
+
+def test_plan_ann_param_validation():
+    ctx = SemanticContext(provider=MockProvider())
+    with pytest.raises(ValueError):
+        Pipeline(ctx, _queries()).vector_topk(
+            "s", EMB, "q", _corpus(8), k=2, ann="fancy")
+    with pytest.raises(ValueError):
+        Pipeline(ctx, _queries()).vector_topk(
+            "s", EMB, "q", _corpus(8), k=2, recall_target=0.9)
+    with pytest.raises(ValueError):
+        Pipeline(ctx, _queries()).hybrid_topk(
+            "s", EMB, "q", _corpus(8), k=2, ann="ivf", recall_target=1.5)
+
+
+def test_hybrid_topk_with_ann_matches_exact_at_full_probe():
+    corpus = _corpus(90)
+    nlist = default_nlist(90)
+
+    def run(**kw):
+        ctx = SemanticContext(provider=MockProvider())
+        return (Pipeline(ctx, _queries(), "queries")
+                .hybrid_topk("s", EMB, "q", corpus, k=4, candidate_k=12,
+                             **kw)
+                .collect()).rows()
+
+    assert run(ann="ivf", nlist=nlist, nprobe=nlist) == run()
+
+
+# ---------------------------------------------------------------------------
+# BM25 score_many
+# ---------------------------------------------------------------------------
+def test_bm25_score_many_bit_identical():
+    docs = ["the cat sat on the mat", "dogs and cats", "",
+            "quantum cat physics", "mat weaving dogs", "cat cat dog"]
+    bm = BM25Index.build(docs)
+    qs = ["cat mat", "dog", "", "cat cat physics", "zebra unknown"]
+    many = bm.score_many(qs)
+    assert many.shape == (5, 6)
+    for i, q in enumerate(qs):
+        assert many[i].tobytes() == bm.score(q).tobytes()
+    assert bm.score_many([]).shape == (0, 6)
+    assert BM25Index.build([]).score_many(["x"]).shape == (1, 0)
+
+
+def test_bm25_topk_node_uses_batched_scoring():
+    corpus = _corpus(30)
+    qs = Table({"q": ["topic 1", "topic 2", "passage 5 body"]})
+    ctx = SemanticContext(provider=MockProvider())
+    t = (Pipeline(ctx, qs, "queries")
+         .bm25_topk("b", "q", corpus, k=4)
+         .collect())
+    bm = BM25Index.build([str(x) for x in corpus.column("text")])
+    exp = []
+    for q in qs.column("q"):
+        s = bm.score(str(q))
+        order = np.argsort(-s, kind="stable")[:4]
+        exp += [corpus.column("text")[i] for i in order]
+    assert t.column("text") == exp

@@ -98,15 +98,38 @@ def test_rg_lru(rng, B, S, di, chunk, bd, dtype):
 
 @pytest.mark.parametrize("N,D,Q,k,bn", [(1000, 32, 5, 10, 64),
                                         (513, 16, 3, 7, 128),
-                                        (64, 8, 1, 64, 16)])
+                                        (64, 8, 1, 64, 16),
+                                        (5, 8, 2, 9, 64),       # k > N
+                                        (1, 4, 2, 3, 64)])      # 1-doc
 def test_topk_sim(rng, N, D, Q, k, bn):
     c = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
     q = jnp.asarray(rng.standard_normal((Q, D)), jnp.float32)
     s, i = topk_sim(c, q, k, block_n=bn)
-    s_ref, i_ref = topk_sim_ref(c, q, k)
+    s_ref, i_ref = topk_sim_ref(c, q, min(k, N))
+    assert s.shape == (Q, min(k, N))            # k capped at N
     np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-5,
                                rtol=1e-5)
     assert (np.asarray(i) == np.asarray(i_ref)).all()
+
+
+def test_topk_sim_empty_corpus_and_queries(rng):
+    c = jnp.zeros((0, 8), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    s, i = topk_sim(c, q, 5)
+    assert s.shape == (3, 0) and i.shape == (3, 0)
+    s, i = topk_sim(jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+                    jnp.zeros((0, 8), jnp.float32), 2)
+    assert s.shape == (0, 2) and i.shape == (0, 2)
+
+
+def test_topk_sim_interpret_default_is_backend_aware():
+    from repro.kernels.topk_sim.kernel import resolve_interpret
+    # explicit settings win; None resolves per backend (the CI host is
+    # CPU-only, where no compiled Pallas lowering exists)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    expected = jax.default_backend() == "cpu"
+    assert resolve_interpret(None) is expected
 
 
 @pytest.mark.slow
