@@ -97,7 +97,15 @@ def main():
             .llm_rerank({"model": "gpt-4o"},
                         {"prompt": "mentions cyclic joins"},
                         ["content"], by="q"))
-    result = pipe.collect()
+    # pre-flight static analysis BEFORE paying for provider calls:
+    # check() resolves MODEL/PROMPT refs against the catalog, binds
+    # prompt {placeholders} to visible columns, validates ann/k knobs,
+    # and infers every node's output schema — a typo here raises
+    # PlanValidationError with a stable FLK code and ZERO requests
+    # (see docs/diagnostics.md)
+    pipe.check()
+    result = pipe.collect(verify="strict")   # also re-proves each
+    #                                          optimizer rewrite sound
     print("\nplan-based hybrid_topk -> llm_rerank top-5:")
     for r in result.rows():
         print(f"  [{r['score']:.4f}] {r['content']}")

@@ -10,11 +10,14 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import math
 import threading
 from collections import OrderedDict
 from pathlib import Path
 from typing import Any, Optional
+
+logger = logging.getLogger(__name__)
 
 
 def cache_key(model_ref: str, prompt_key: str, function: str,
@@ -116,7 +119,8 @@ class PredictionCache:
             try:
                 rec = json.loads(line)
                 self._data[rec["k"]] = rec["v"]
-            except (json.JSONDecodeError, KeyError):
+            except (json.JSONDecodeError, KeyError) as exc:
+                logger.debug("cache line skipped (%s): %.80s", exc, line)
                 continue
         self._persisted_lines = len(lines)
         while len(self._data) > self.capacity:
@@ -175,7 +179,8 @@ class SelectivityStore:
             return {}
         try:
             data = json.loads(self.path.read_text())
-        except (json.JSONDecodeError, OSError):
+        except (json.JSONDecodeError, OSError) as exc:
+            logger.debug("sidecar %s unreadable: %s", self.path, exc)
             return {}
         out: dict[str, list] = {}
         for pid, obs in data.get("stats", {}).items():
@@ -350,7 +355,8 @@ class IndexStore:
             return
         try:
             data = json.loads(self.path.read_text())
-        except (json.JSONDecodeError, OSError):
+        except (json.JSONDecodeError, OSError) as exc:
+            logger.debug("sidecar %s unreadable: %s", self.path, exc)
             return
         if not isinstance(data, dict):
             return
@@ -541,7 +547,8 @@ class CalibrationStore:
             return {}
         try:
             data = json.loads(self.path.read_text())
-        except (json.JSONDecodeError, OSError):
+        except (json.JSONDecodeError, OSError) as exc:
+            logger.debug("sidecar %s unreadable: %s", self.path, exc)
             return {}
         if not isinstance(data, dict):
             return {}

@@ -25,7 +25,7 @@ import json
 import re
 import threading
 import time
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from pathlib import Path
 from typing import Optional
 
@@ -122,6 +122,8 @@ class Catalog:
         with lock:
             res = ModelResource(name=name, version=reg.next_version(name),
                                 arch=arch, scope=scope,
+                                # wall-clock catalog timestamp
+                                # flocklint: ignore[FLKL101]
                                 created_at=time.time(), **kw)
             reg.create(res)
         self._persist()
@@ -134,6 +136,8 @@ class Catalog:
         with lock:
             res = PromptResource(name=name, version=reg.next_version(name),
                                  text=text, scope=scope,
+                                 # wall-clock catalog timestamp
+                                 # flocklint: ignore[FLKL101]
                                  created_at=time.time())
             reg.create(res)
         self._persist()

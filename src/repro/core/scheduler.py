@@ -71,6 +71,12 @@ from typing import Callable, Dict, List, Optional, Sequence
 from .batching import BatchStats, ContextOverflowError, plan_batches
 from .resources import ModelResource
 
+# Lock discipline (checked by tools/flocklint.py): every lock here is a
+# leaf — no code path holds two at once, and provider dispatch / pool
+# joins happen strictly outside lock bodies.  If nesting ever becomes
+# necessary it must follow this acquisition order:
+# flocklint: lock-order: _pack_lock < _lock < job._lock < scheduler._lock
+
 
 def split_batch(batch: List[int]) -> tuple[List[int], List[int]]:
     """Adaptive 10% shrink: (head to retry, tail to requeue)."""
@@ -505,7 +511,7 @@ class RequestScheduler:
         try:
             for b in owned_batches:
                 self._pool.submit(self._run_batch, job, b)
-        except BaseException as exc:
+        except BaseException as exc:  # flocklint: ignore[FLKL105]
             # e.g. pool already shut down: _fail releases this job's
             # registered in-flight entries (with the error) so no later
             # borrower hangs on them, then the caller sees the error
@@ -753,7 +759,8 @@ class RequestScheduler:
                 self.stats.add(packed_requests=1,
                                packed_batches=len(segments))
                 self._pool.submit(self._run_pack, pending)
-        except BaseException as exc:    # pool shut down mid-linger
+        # pool shut down mid-linger  # flocklint: ignore[FLKL105]
+        except BaseException as exc:
             for s in segments:
                 s.job._fail(exc)
 
@@ -782,7 +789,8 @@ class RequestScheduler:
                     self._execute_admitted(task[1], task[2])
                 else:
                     self._execute_pack(task[1])
-            except BaseException as exc:     # surfaced at result()
+            # surfaced at result()  # flocklint: ignore[FLKL105]
+            except BaseException as exc:
                 if task[0] == "batch":
                     task[1]._fail(exc)
                 else:
@@ -939,7 +947,8 @@ class SpeculativeMaskJoin:
         def worker(k: int, thunk):
             try:
                 masks[k] = list(thunk())
-            except BaseException as exc:    # re-raised on the caller
+            # re-raised on the caller  # flocklint: ignore[FLKL105]
+            except BaseException as exc:
                 errors.append(exc)
 
         threads = [threading.Thread(target=worker, args=(k, th),

@@ -1,4 +1,7 @@
 from .table import Table
+from .analysis import (Diagnostic, Obligation, PlanValidationError,
+                       Schema, analyze_plan, infer_schema,
+                       verify_rewrites)
 from .pipeline import Pipeline, PlanNode, ask, copack_identity
 from .retrieval_ops import RETRIEVAL_OPS
 from .optimizer import (OptimizedPlan, PlanCost, estimate_plan_cost,

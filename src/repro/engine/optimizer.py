@@ -83,6 +83,7 @@ from repro.retrieval.ivf import (IVF_MIN_DOCS, default_nlist,
                                  planned_recall)
 from repro.retrieval.vector import DEFAULT_RECALL_TARGET
 
+from .analysis import Obligation, semantic_key
 from .retrieval_ops import RETRIEVAL_OPS, pushed_candidate_k
 from .table import Table
 
@@ -221,6 +222,10 @@ class OptimizedPlan:
     # "est_wall"}} with est_wall None when uncalibrated
     objective: str = "latency"
     frontiers: dict = field(default_factory=dict)
+    # machine-checkable soundness claims, one or more per applied
+    # rewrite, discharged by ``analysis.verify_rewrites`` on the
+    # optimized plan (``collect(verify="strict")`` runs it)
+    obligations: List[Obligation] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -814,7 +819,8 @@ def _commutes_before(rel, sem) -> bool:
     return False
 
 
-def _pushdown(nodes: List, rewrites: List[str]) -> List:
+def _pushdown(nodes: List, rewrites: List[str],
+              obligations: List[Obligation]) -> List:
     nodes = list(nodes)
     changed = True
     while changed:
@@ -825,7 +831,16 @@ def _pushdown(nodes: List, rewrites: List[str]) -> List:
                     and b.op in RELATIONAL_OPS
                     and _commutes_before(b, a)):
                 nodes[i], nodes[i + 1] = b, a
-                rewrites.append(f"pushdown({b.op} before {a.op})")
+                rule = f"pushdown({b.op} before {a.op})"
+                rewrites.append(rule)
+                # claim: b may legally run before a, and b's read-set
+                # is satisfied at its new position (the verifier
+                # re-checks both with its own legality table)
+                obligations.append(Obligation(
+                    rule=rule, kind="commute",
+                    payload={"rel_id": id(b), "rel_op": b.op,
+                             "sem_key": semantic_key(a),
+                             "sem_node": a}))
                 changed = True
     return nodes
 
@@ -834,7 +849,8 @@ def _pushdown(nodes: List, rewrites: List[str]) -> List:
 # rule 1b: retrieval rewrites (corpus pruning, k-pushdown, embed dedupe)
 # ---------------------------------------------------------------------------
 def _retrieval_rewrites(ctx: SemanticContext, nodes: List,
-                        rewrites: List[str]) -> List:
+                        rewrites: List[str],
+                        obligations: List[Obligation]) -> List:
     """Monotone retrieval-operator rewrites (never cost-gated — each one
     only ever removes work):
 
@@ -870,15 +886,23 @@ def _retrieval_rewrites(ctx: SemanticContext, nodes: List,
                 and not info.get("prune_corpus")
                 and node.op != "bm25_topk"):
             changes["prune_corpus"] = True
-            rewrites.append(f"prune_corpus({node.op}: corpus filter "
-                            f"below the index build)")
+            rule = (f"prune_corpus({node.op}: corpus filter "
+                    f"below the index build)")
+            rewrites.append(rule)
+            obligations.append(Obligation(
+                rule=rule, kind="selection_invariance",
+                payload={"key": semantic_key(node)}))
         if node.op == "hybrid_topk" and not info.get("candidate_k"):
             c = pushed_candidate_k(info["k"])
             if c < info.get("corpus_rows", 0):
                 changes["candidate_k"] = c
-                rewrites.append(
-                    f"k_pushdown(hybrid_topk: k={info['k']} -> "
-                    f"per-retriever candidate_k={c})")
+                rule = (f"k_pushdown(hybrid_topk: k={info['k']} -> "
+                        f"per-retriever candidate_k={c})")
+                rewrites.append(rule)
+                obligations.append(Obligation(
+                    rule=rule, kind="recall_contract",
+                    payload={"key": semantic_key(node),
+                             "k": info["k"], "candidate_k": c}))
         if (node.op != "bm25_topk" and info.get("ann")
                 and not info.get("ann_resolved")):
             # ann_select: resolve auto/forced ANN into a concrete scan
@@ -900,12 +924,22 @@ def _retrieval_rewrites(ctx: SemanticContext, nodes: List,
                     ann_nprobe=dec["nprobe"],
                     ann_recall_est=dec["recall_est"],
                     ann_calibrated=dec["calibrated"])
-                rewrites.append(
+                rule = (
                     f"ann_select({node.op}: ann={info['ann']} -> "
                     f"{dec['choice']} nlist={dec['nlist']} "
                     f"nprobe={dec['nprobe']} "
                     f"est_recall={dec['recall_est']:.2f}"
                     f"{' calibrated' if dec['calibrated'] else ''})")
+                rewrites.append(rule)
+                obligations.append(Obligation(
+                    rule=rule, kind="recall_contract",
+                    payload={"key": semantic_key(node),
+                             "mode": info["ann"],
+                             "choice": dec["choice"],
+                             "nlist": dec["nlist"],
+                             "nprobe": dec["nprobe"],
+                             "recall_est": dec["recall_est"],
+                             "recall_target": dec["recall_target"]}))
         if "model" in info and info.get("corpus_fp"):
             try:
                 ref = ctx.resolve_model(info["model"]).ref
@@ -914,9 +948,12 @@ def _retrieval_rewrites(ctx: SemanticContext, nodes: List,
             if ref is not None:
                 key = (ref, info["corpus_fp"])
                 if key in seen:
-                    rewrites.append(
-                        f"dedupe_corpus_embed({node.op}: corpus index "
-                        f"shared with an earlier node)")
+                    rule = (f"dedupe_corpus_embed({node.op}: corpus "
+                            f"index shared with an earlier node)")
+                    rewrites.append(rule)
+                    obligations.append(Obligation(
+                        rule=rule, kind="index_shared",
+                        payload={"ref": ref, "fp": info["corpus_fp"]}))
                 seen.add(key)
         if changes:
             new_info = dict(info)
@@ -992,7 +1029,8 @@ def _make_fused_node(ctx: SemanticContext, group: List):
         "fused": [g.op for g in group]}, fn)
 
 
-def _fuse(ctx: SemanticContext, nodes: List, rewrites: List[str]) -> List:
+def _fuse(ctx: SemanticContext, nodes: List, rewrites: List[str],
+          obligations: List[Obligation]) -> List:
     out: List = []
     i = 0
     while i < len(nodes):
@@ -1004,9 +1042,24 @@ def _fuse(ctx: SemanticContext, nodes: List, rewrites: List[str]) -> List:
                 group.append(nodes[j])
                 j += 1
             if len(group) > 1:
-                out.append(_make_fused_node(ctx, group))
-                rewrites.append(
-                    "fusion(" + "+".join(g.op for g in group) + ")")
+                fused = _make_fused_node(ctx, group)
+                out.append(fused)
+                rule = "fusion(" + "+".join(g.op for g in group) + ")"
+                rewrites.append(rule)
+                # claim: one llm_fused node carries exactly the merged
+                # sub-tasks (kinds, outs, cols, prompts) under one model
+                obligations.append(Obligation(
+                    rule=rule, kind="fusion_exact",
+                    payload={"kinds": list(fused.info["kinds"]),
+                             "cols": list(fused.info["cols"]),
+                             "outs": list(fused.info["outs"]),
+                             "prompts": list(fused.info["prompts"]),
+                             "models": [g.info["model"]
+                                        for g in group]}))
+                if "filter" in fused.info["kinds"]:
+                    obligations.append(Obligation(
+                        rule=rule, kind="mask_equivalence",
+                        payload={}))
                 i = j
                 continue
         out.append(node)
@@ -1033,7 +1086,8 @@ def _filter_rank(ctx: SemanticContext, node, source: Table) -> float:
 
 
 def _reorder_filters(ctx: SemanticContext, nodes: List, source: Table,
-                     rewrites: List[str]) -> List:
+                     rewrites: List[str],
+                     obligations: List[Obligation]) -> List:
     out: List = []
     i = 0
     while i < len(nodes):
@@ -1047,9 +1101,13 @@ def _reorder_filters(ctx: SemanticContext, nodes: List, source: Table,
         chain = nodes[i:j]
         ranked = sorted(chain, key=lambda n: _filter_rank(ctx, n, source))
         if ranked != chain:
-            rewrites.append(
-                f"reorder_filters(chain of {len(chain)} by cost per "
-                f"eliminated tuple)")
+            rule = (f"reorder_filters(chain of {len(chain)} by cost "
+                    f"per eliminated tuple)")
+            rewrites.append(rule)
+            # claim: conjunctions commute — the plan's filter-predicate
+            # multiset is unchanged by the reorder
+            obligations.append(Obligation(
+                rule=rule, kind="mask_equivalence", payload={}))
         out.extend(ranked)
         i = j
     return out
@@ -1191,7 +1249,8 @@ def _decide_speculation(ctx: SemanticContext, source: Table, chain: List,
 
 
 def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
-                      rewrites: List[str], mode: str
+                      rewrites: List[str],
+                      obligations: List[Obligation], mode: str
                       ) -> Tuple[List, List[SpeculationDecision]]:
     """Replace each eligible ``llm_filter`` chain (length >= 2) with a
     speculative mask-join node when the decision model says it pays."""
@@ -1220,11 +1279,17 @@ def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
         decisions.append(decision)
         if decision.chosen:
             out.append(_make_spec_chain_node(ctx, chain))
-            rewrites.append(
-                f"speculate(chain of {len(chain)}: "
-                f"spec_waves={decision.spec_waves} vs "
-                f"serial_waves={decision.serial_waves}, "
-                f"wasted<={decision.wasted_requests})")
+            rule = (f"speculate(chain of {len(chain)}: "
+                    f"spec_waves={decision.spec_waves} vs "
+                    f"serial_waves={decision.serial_waves}, "
+                    f"wasted<={decision.wasted_requests})")
+            rewrites.append(rule)
+            # claim: the mask-join ANDs exactly the chain's predicates
+            # (surviving stream bit-identical to serial execution)
+            obligations.append(Obligation(
+                rule=rule, kind="mask_equivalence",
+                payload={"spec_chain": True,
+                         "prompts": [g.info["prompt"] for g in chain]}))
         else:
             out.extend(chain)
             rewrites.append(
@@ -1307,22 +1372,25 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
             f"objective must be 'latency' or 'cost', got {objective!r}")
     naive = [n for n in nodes]
     rewrites: List[str] = []
-    new = _pushdown(list(nodes), rewrites)
-    new = _retrieval_rewrites(ctx, new, rewrites)
+    obligations: List[Obligation] = []
+    new = _pushdown(list(nodes), rewrites, obligations)
+    new = _retrieval_rewrites(ctx, new, rewrites, obligations)
 
     cost, _ = estimate_plan_cost(ctx, source, new)
     for rule in (_reorder_filters, _fuse):
         trial_rw: List[str] = []
+        trial_ob: List[Obligation] = []
         if rule is _reorder_filters:
-            trial = rule(ctx, new, source, trial_rw)
+            trial = rule(ctx, new, source, trial_rw, trial_ob)
         else:
-            trial = rule(ctx, new, trial_rw)
+            trial = rule(ctx, new, trial_rw, trial_ob)
         if not trial_rw:
             continue
         trial_cost, _ = estimate_plan_cost(ctx, source, trial)
         if _cost_rank(trial_cost, objective) <= _cost_rank(cost, objective):
             new, cost = trial, trial_cost
             rewrites.extend(trial_rw)
+            obligations.extend(trial_ob)
         else:
             rewrites.extend(f"rejected({rw}: estimated cost higher)"
                             for rw in trial_rw)
@@ -1331,11 +1399,17 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
     if speculate:
         mode = "always" if speculate == "always" else "auto"
         new, spec_decisions = _speculate_chains(ctx, source, new,
-                                                rewrites, mode)
+                                                rewrites, obligations,
+                                                mode)
 
+    if rewrites:
+        # the one claim every rewrite shares: the plan's final output
+        # schema (names + dtypes) is unchanged
+        obligations.append(Obligation(
+            rule="plan", kind="schema_preserved", payload={}))
     plan = OptimizedPlan(nodes=new, rewrites=rewrites,
                          spec_decisions=spec_decisions,
-                         objective=objective)
+                         objective=objective, obligations=obligations)
     plan.naive_cost, plan.naive_node_costs = estimate_plan_cost(
         ctx, source, list(naive))
     plan.optimized_cost, plan.optimized_node_costs = estimate_plan_cost(

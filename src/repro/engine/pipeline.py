@@ -354,6 +354,48 @@ class Pipeline:
             info["by"] = by
         return self._add("llm_rerank", fn, **info)
 
+    # ---- static analysis ---------------------------------------------------
+    def check(self, strict: bool = True):
+        """Pre-flight static analysis of the plan *as written* — schema
+        inference, catalog resolution of MODEL/PROMPT refs, prompt
+        placeholder binding, and parameter validation — with **zero
+        provider requests** (paper §2.1: resources are schema objects,
+        so references are statically resolvable).
+
+        Returns the list of ``analysis.Diagnostic`` findings.  With
+        ``strict=True`` (default) any error-severity diagnostic raises
+        ``analysis.PlanValidationError`` instead, carrying the full
+        list on ``.diagnostics``."""
+        from .analysis import analyze_plan
+        res = analyze_plan(self.ctx, self.source, self.nodes)
+        self._last_diagnostics = res.diagnostics
+        if strict:
+            res.raise_on_error()
+        return res.diagnostics
+
+    def _verify_preflight(self, verify: str):
+        from .analysis import PlanValidationError, analyze_plan
+        res = analyze_plan(self.ctx, self.source, self.nodes)
+        self._last_diagnostics = list(res.diagnostics)
+        if res.errors and verify == "strict":
+            raise PlanValidationError(res.diagnostics)
+        if verify == "warn":
+            import warnings
+            for d in res.diagnostics:
+                warnings.warn(str(d), stacklevel=3)
+
+    def _verify_rewrites(self, verify: str, opt):
+        from .analysis import PlanValidationError, verify_rewrites
+        diags = verify_rewrites(self.ctx, self.source, self.nodes, opt)
+        self._last_diagnostics = (
+            getattr(self, "_last_diagnostics", []) + diags)
+        if diags and verify == "strict":
+            raise PlanValidationError(diags)
+        if verify == "warn":
+            import warnings
+            for d in diags:
+                warnings.warn(str(d), stacklevel=3)
+
     # ---- execution -----------------------------------------------------------
     def _plan(self, speculate=None, objective=None):
         """Run (and memoise, per ``(speculate, objective)`` mode) the
@@ -445,7 +487,8 @@ class Pipeline:
             try:
                 tbl = node.fn(t_in)
                 results[k] = (tbl, self.ctx.last_report_slot())
-            except BaseException as exc:       # re-raised on the caller
+            # re-raised on the caller  # flocklint: ignore[FLKL105]
+            except BaseException as exc:
                 errors.append(exc)
 
         shared = (self._copack_group_ids(group)
@@ -478,7 +521,8 @@ class Pipeline:
 
     def collect(self, optimize: bool = True,
                 parallel: Optional[bool] = None,
-                speculate=None, objective: Optional[str] = None) -> Table:
+                speculate=None, objective: Optional[str] = None,
+                verify: str = "off") -> Table:
         """Execute the plan.  ``optimize=False`` is the escape hatch that
         runs the nodes exactly as chained (no pushdown/fusion/reorder —
         and no speculation, which is an optimizer rewrite).
@@ -502,7 +546,15 @@ class Pipeline:
         this execution: ``"latency"`` bounds the co-pack linger by the
         calibrated expected-arrival window and ranks plan rewrites by
         estimated wall-clock, ``"cost"`` keeps the full configured
-        linger (density dial) and ranks by token/request spend."""
+        linger (density dial) and ranks by token/request spend.
+
+        ``verify`` runs the static analyzer (``engine/analysis.py``)
+        around execution: ``"strict"`` rejects the plan with
+        ``PlanValidationError`` BEFORE any provider request when
+        pre-flight finds errors, and discharges every optimizer
+        rewrite's soundness obligation on the optimized plan;
+        ``"warn"`` emits the same findings as ``warnings`` and
+        proceeds; ``"off"`` (default) skips analysis entirely."""
         if parallel is None:
             parallel = self.ctx.scheduler is not None
         if speculate is None:
@@ -510,6 +562,13 @@ class Pipeline:
         if objective is not None and objective not in ("latency", "cost"):
             raise ValueError("objective must be 'latency' or 'cost', "
                              f"got {objective!r}")
+        if verify not in ("off", "warn", "strict"):
+            raise ValueError("verify must be 'off', 'warn' or "
+                             f"'strict', got {verify!r}")
+        if verify != "off":
+            # pre-flight BEFORE planning/execution: an invalid plan is
+            # rejected with zero provider requests
+            self._verify_preflight(verify)
         if optimize:
             # remembered for explain(); an optimize=False run bypasses
             # the optimizer entirely, so recording its speculate mode
@@ -522,8 +581,15 @@ class Pipeline:
         if objective is not None:
             self.ctx.objective = objective
         try:
-            nodes = (self._plan(speculate).nodes if optimize
-                     else self.nodes)
+            if optimize:
+                opt = self._plan(speculate)
+                if verify != "off":
+                    # discharge the optimizer's soundness obligations
+                    # on the rewritten plan before it executes
+                    self._verify_rewrites(verify, opt)
+                nodes = opt.nodes
+            else:
+                nodes = self.nodes
             self._executed_nodes = nodes
             self._executed_optimized = optimize
             t = self.source
@@ -633,6 +699,11 @@ class Pipeline:
         lines.append("Optimized plan:")
         self._render_nodes(lines, opt.nodes, opt.optimized_node_costs)
         lines.append(f"  estimated: {opt.optimized_cost}")
+        from .analysis import infer_schema
+        lines.append("Inferred schema (optimized plan):")
+        for i, (node, sch) in enumerate(
+                zip(opt.nodes, infer_schema(self.source, opt.nodes))):
+            lines.append(f"  [{i}] {node.op:18s} -> {sch.render()}")
         if opt.frontiers:
             # both scheduling frontiers of the optimized plan: the
             # co-packed request count is free under "latency" (last-

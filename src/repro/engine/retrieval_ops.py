@@ -131,7 +131,8 @@ def _embed_corpus_and_queries(ctx: SemanticContext, model_spec,
     def worker(slot: int, thunk):
         try:
             slots[slot] = thunk()
-        except BaseException as exc:       # re-raised on the caller
+        # re-raised on the caller  # flocklint: ignore[FLKL105]
+        except BaseException as exc:
             errors.append(exc)
 
     # two expected submitters under one embedding identity (corpus +

@@ -7,7 +7,7 @@ plan re-execution deterministic for the cache/dedup benchmarks).
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterable, List, Sequence
+from typing import Callable, Dict, List, Sequence
 
 import numpy as np
 

@@ -127,10 +127,10 @@ def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh):
 def lower_and_analyze(cfg, cell, mesh, *, want_memory=True):
     fn, args, shardings, donate = build_cell(cfg, cell, mesh)
     jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
-    t0 = time.time()
+    t0 = time.monotonic()
     lowered = jitted.lower(*args)
     compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     ca = compiled.cost_analysis() or {}
     if isinstance(ca, (list, tuple)):      # jax<=0.4.x: one dict per device
         ca = ca[0] if ca else {}
@@ -317,7 +317,7 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mk in meshes:
-                t0 = time.time()
+                t0 = time.monotonic()
                 rec = run_cell(arch, shape, mk, out_dir,
                                skip_existing=not args.force,
                                overrides=overrides, variant=args.variant)
@@ -334,7 +334,7 @@ def main():
                 elif status == "FAIL":
                     extra = rec["error"][:120]
                 print(f"[{status:4s}] {arch:24s} {shape:12s} {mk:6s} "
-                      f"{time.time()-t0:6.1f}s {extra}", flush=True)
+                      f"{time.monotonic()-t0:6.1f}s {extra}", flush=True)
     print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
     return 0 if n_fail == 0 else 1
 

@@ -37,17 +37,17 @@ def run(argv=None):
            else get_config(args.arch))
 
     if args.semantic:
-        from repro.core import (MockProvider, SemanticContext, llm_complete)
+        from repro.core import SemanticContext, llm_complete
         from repro.core.provider import LocalJaxProvider
         ctx = SemanticContext(provider=LocalJaxProvider(args.arch))
         rows = [{"text": f"request {i} body " * 3}
                 for i in range(args.requests)]
-        t0 = time.time()
+        t0 = time.monotonic()
         out = llm_complete(ctx, {"model": "local",
                                  "context_window": args.max_context,
                                  "max_output_tokens": 8},
                            {"prompt": "echo"}, rows)
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         print(f"semantic path: {len(out)} rows in {dt:.2f}s "
               f"({len(out)/dt:.1f} rows/s); "
               f"reports={[r.batch_sizes for r in ctx.reports]}")
@@ -56,13 +56,13 @@ def run(argv=None):
     eng = ServingEngine(cfg, n_slots=args.slots,
                         max_context=args.max_context)
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.monotonic()
     reqs = [eng.submit(list(rng.integers(0, cfg.vocab_size,
                                          args.prompt_len)),
                        max_new_tokens=args.max_new)
             for _ in range(args.requests)]
     eng.run_until_idle()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     done = sum(r.finished for r in reqs)
     toks = sum(len(r.generated) for r in reqs)
     print(f"{done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "

@@ -15,12 +15,9 @@ Fault tolerance drill (see tests/test_fault_tolerance.py):
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import model as M

@@ -13,7 +13,6 @@ un-meshed in unit tests.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -256,7 +255,8 @@ def blocked_attention(q, k, v, *, causal: bool, window: int = 0,
                 o, o_blk, qi, 1),
             lambda o: o, out)
         # reset accumulators when flushing (next pair starts a new q block)
-        rst = lambda x, fill: jnp.where(flush, jnp.full_like(x, fill), x)
+        def rst(x, fill):
+            return jnp.where(flush, jnp.full_like(x, fill), x)
         return (rst(m_new, -1e30), rst(l, 0.0), rst(acc, 0.0), out), None
 
     m0 = jnp.full((B, KH, G, bq), -1e30, F32)

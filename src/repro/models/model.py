@@ -15,7 +15,6 @@ Batch dict convention (all optional keys absent when unused):
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

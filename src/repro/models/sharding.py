@@ -17,11 +17,8 @@ Layout (DESIGN.md §6):
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

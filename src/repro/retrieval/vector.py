@@ -30,6 +30,7 @@ next to the base instead of re-embedding the whole corpus.
 
 from __future__ import annotations
 
+import logging
 from typing import Optional, Sequence
 
 import jax
@@ -37,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .ivf import IVFIndex
+
+logger = logging.getLogger(__name__)
 
 # On CPU the Pallas kernel runs interpreted; its per-call overhead only
 # amortises over big corpora, so small scans keep the jnp path (which is
@@ -93,7 +96,10 @@ def active_mesh():
     try:
         from jax.interpreters import pxla
         mesh = pxla.thread_resources.env.physical_mesh
-    except Exception:
+    except (ImportError, AttributeError) as exc:
+        # pxla internals moved across jax releases; treat an unknown
+        # layout as "no mesh" rather than failing the scan
+        logger.debug("active_mesh probe failed: %s", exc)
         return None
     if mesh is None or mesh.empty or mesh.size <= 1:
         return None

@@ -29,7 +29,6 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.models.layers import NULL_POLICY
 
 
 @dataclass
@@ -39,6 +38,7 @@ class Request:
     max_new_tokens: int = 32
     eos_token: int = -1              # -1: never stop early
     generated: List[int] = field(default_factory=list)
+    # wall-clock arrival timestamp  # flocklint: ignore[FLKL101]
     submitted_at: float = field(default_factory=time.time)
     finished: bool = False
     slot: int = -1

@@ -19,11 +19,10 @@ from __future__ import annotations
 
 import json
 import re
-import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np
@@ -103,6 +102,7 @@ class CheckpointManager:
         final = self.dir / f"step_{step:010d}.npz"
         np.savez(tmp, __dtypes__=np.frombuffer(
             json.dumps(dtypes).encode(), np.uint8), **enc)
+        # wall-clock manifest timestamp  # flocklint: ignore[FLKL101]
         manifest = {"step": step, "time": time.time(), **metadata}
         (self.dir / f"step_{step:010d}.json").write_text(
             json.dumps(manifest))

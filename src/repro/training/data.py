@@ -83,11 +83,11 @@ class StragglerWatchdog:
         self._step = 0
 
     def start(self):
-        self._t0 = time.time()
+        self._t0 = time.monotonic()
 
     def stop(self) -> bool:
         """Record step time; returns True if this step straggled."""
-        dt = time.time() - self._t0
+        dt = time.monotonic() - self._t0
         self.times.append(dt)
         self.times = self.times[-self.window:]
         self._step += 1

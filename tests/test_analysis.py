@@ -1,0 +1,593 @@
+"""Static plan analyzer tests (engine/analysis.py).
+
+Covers the three analyzer layers:
+
+  * golden diagnostic-code tests — one per FLK rule, asserting the
+    stable code, severity, and that ``Pipeline.check()`` raises (or
+    not) accordingly;
+  * the zero-provider-request guarantee — an invalid plan is rejected
+    by ``check()`` / ``collect(verify="strict")`` before ANY provider
+    call;
+  * rewrite-soundness obligations — ``collect(verify="strict")``
+    discharges every obligation the optimizer emits across a
+    representative plan corpus (pushdown, fusion, filter reorder,
+    corpus pruning, ann_select, embed dedupe, speculative chains), and
+    a tampered plan is caught as FLK010.
+"""
+
+import json
+import re
+
+import pytest
+
+from repro.core import (MockProvider, SemanticContext,
+                        reset_global_catalog)
+from repro.engine import (Pipeline, PlanValidationError, Table,
+                          analyze_plan, infer_schema, verify_rewrites)
+
+MODEL = {"model": "m", "context_window": 4096, "max_output_tokens": 8}
+EMB = {"model": "e", "embedding_dim": 16, "context_window": 4096}
+
+_ROW_CONTENT = re.compile(r"<text>(.*?)</text>")
+_TASK = re.compile(r"\bt(\d+) \[(filter|complete|complete_json)\]")
+
+
+def _content(row):
+    m = _ROW_CONTENT.search(row)
+    return m.group(1) if m else row
+
+
+def _behaviour(kind, prefix, rows):
+    """Content-based deterministic answers (same contract as the
+    optimizer equivalence tests): identical tuples get identical
+    answers whatever request carries them."""
+    def one(kind, text):
+        if kind == "filter":
+            return "true" if "join" in text else "false"
+        if kind == "complete_json":
+            return json.dumps({"topic": text.split()[0] if text else ""})
+        return f"summary({text})"
+
+    if kind == "multi":
+        tasks = _TASK.findall(prefix)
+        out = []
+        for i, r in enumerate(rows):
+            text = _content(r)
+            obj = {}
+            for tag, tkind in tasks:
+                v = one(tkind, text)
+                obj[f"t{tag}"] = (v == "true" if tkind == "filter"
+                                  else json.loads(v)
+                                  if tkind == "complete_json" else v)
+            out.append(f"{i}: {json.dumps(obj)}")
+        return out
+    if kind in ("filter", "complete", "complete_json"):
+        return [f"{i}: {one(kind, _content(r))}"
+                for i, r in enumerate(rows)]
+    return None
+
+
+def _ctx(**kw):
+    reset_global_catalog()
+    return SemanticContext(provider=MockProvider(_behaviour), **kw)
+
+
+def _calls(ctx):
+    return ctx.provider.stats.snapshot()["calls"]
+
+
+@pytest.fixture
+def table():
+    rows = 12
+    return Table({
+        "id": list(range(rows)),
+        "text": [f"paper {i} about {'join' if i % 3 == 0 else 'index'} "
+                 f"structures" for i in range(rows)],
+        "year": [2000 + i for i in range(rows)],
+    })
+
+
+def _corpus(n=48):
+    topics = ("joins", "indexes", "vectors")
+    return Table({
+        "content": [f"doc {i} about {topics[i % 3]} with a body of "
+                    f"searchable text" for i in range(n)],
+        "year": [2000 + i % 6 for i in range(n)],
+    })
+
+
+def _queries():
+    return Table({"q": ["join algorithms", "vector search"],
+                  "qid": [0, 1]})
+
+
+def _codes(exc_or_diags):
+    diags = getattr(exc_or_diags, "diagnostics", exc_or_diags)
+    return [d.code for d in diags]
+
+
+# ---------------------------------------------------------------------------
+# golden diagnostic codes
+# ---------------------------------------------------------------------------
+def test_flk001_unresolved_model_ref(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", {"model_name": "ghost"}, {"prompt": "p"}, ["text"])
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK001"]
+    assert "ghost" in str(ei.value)
+    assert _calls(ctx) == 0
+
+
+def test_registered_model_ref_resolves(table):
+    ctx = _ctx()
+    ctx.catalog.create_model("prod", arch="mock", context_window=4096,
+                             max_output_tokens=8)
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", {"model_name": "prod"}, {"prompt": "p"}, ["text"])
+    assert pipe.check() == []
+
+
+def test_flk002_unresolved_prompt_ref(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL, {"prompt_name": "ghost"}, ["text"])
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK002"]
+
+
+def test_flk003_placeholder_without_column(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL, {"prompt": "summarize {body}"}, ["text"])
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK003"]
+    assert "{body}" in str(ei.value)
+
+
+def test_flk003_placeholder_bound_and_json_braces_exempt(table):
+    ctx = _ctx()
+    # {text} binds to a visible input column; JSON-shaped braces and
+    # {{escaped}} braces are not placeholders
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL,
+        {"prompt": 'from {text} emit {"k": 1} and {{literal}}'},
+        ["text"])
+    assert pipe.check() == []
+
+
+def test_flk003_catalog_prompt_placeholders_checked(table):
+    ctx = _ctx()
+    ctx.catalog.create_prompt("summarize", "condense {body}")
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL, {"prompt_name": "summarize"}, ["text"])
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK003"]
+
+
+def test_flk004_missing_input_column(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL, {"prompt": "p"}, ["text", "abstract"])
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK004"]
+    assert "abstract" in str(ei.value)
+
+
+def test_flk004_column_created_upstream_is_visible(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "t")
+            .llm_complete("summary", MODEL, {"prompt": "p"}, ["text"])
+            .llm_complete("meta", MODEL, {"prompt": "q"}, ["summary"]))
+    assert pipe.check() == []
+
+
+def test_flk005_bad_k(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").vector_topk(
+        "score", EMB, "text", _corpus(8), k=0, doc_col="content")
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK005"]
+
+
+def test_flk005_bad_fusion(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").hybrid_topk(
+        "score", EMB, "text", _corpus(8), k=2, fusion="nope",
+        doc_col="content")
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK005"]
+
+
+def test_flk005_model_spec_type(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", "not-a-dict", {"prompt": "p"}, ["text"])
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert _codes(ei.value) == ["FLK005"]
+
+
+def test_flk005_nprobe_above_nlist_is_warning_only(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").vector_topk(
+        "score", EMB, "text", _corpus(8), k=2, doc_col="content",
+        ann="ivf", nprobe=64, nlist=8)
+    diags = pipe.check()          # strict: warnings do not raise
+    assert _codes(diags) == ["FLK005"]
+    assert diags[0].severity == "warning"
+
+
+def test_flk006_retrieval_column_collision_matches_runtime():
+    # parent already holds BOTH the doc column and its _doc rename —
+    # the analyzer must flag statically what Table.lateral raises at
+    # execution time
+    ctx = _ctx()
+    parent = Table({"q": ["join"], "content": ["x"],
+                    "content_doc": ["y"]})
+    pipe = Pipeline(ctx, parent, "t").vector_topk(
+        "score", EMB, "q", _corpus(8), k=2, doc_col="content")
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.check()
+    assert "FLK006" in _codes(ei.value)
+    with pytest.raises(ValueError):
+        pipe.collect(optimize=False)
+
+
+def test_retrieval_doc_rename_inferred():
+    # single collision: corpus 'content' arrives as 'content_doc'
+    ctx = _ctx()
+    parent = Table({"q": ["join"], "content": ["mine"]})
+    pipe = Pipeline(ctx, parent, "t").vector_topk(
+        "score", EMB, "q", _corpus(8), k=2, doc_col="content")
+    assert pipe.check() == []
+    schemas = infer_schema(parent, pipe.nodes)
+    out = schemas[-1]
+    for col in ("q", "content", "content_doc", "score", "score_rank"):
+        assert col in out
+    got = pipe.collect(optimize=False)
+    assert set(out.names) == set(got.column_names)
+
+
+def test_inferred_schema_matches_execution_across_ops(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "t")
+            .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+            .llm_complete("summary", MODEL, {"prompt": "sum"}, ["text"])
+            .llm_complete_json("meta", MODEL, {"prompt": "ex"}, ["text"])
+            .order_by("year", desc=True)
+            .limit(4))
+    schemas = infer_schema(table, pipe.nodes)
+    got = pipe.collect(optimize=False)
+    assert list(schemas[-1].names) == got.column_names
+
+
+def test_explain_renders_inferred_schema(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "t")
+            .llm_complete("summary", MODEL, {"prompt": "sum"}, ["text"])
+            .limit(2))
+    text = pipe.explain()
+    assert "Inferred schema (optimized plan):" in text
+    assert "summary:str" in text
+
+
+# ---------------------------------------------------------------------------
+# zero provider requests on rejection
+# ---------------------------------------------------------------------------
+def test_invalid_plan_rejected_with_zero_provider_requests(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "t")
+            .llm_filter(MODEL, {"prompt": "keep {missing}?"}, ["text"])
+            .llm_complete("s", {"model_name": "ghost"},
+                          {"prompt": "p"}, ["text"]))
+    with pytest.raises(PlanValidationError) as ei:
+        pipe.collect(verify="strict")
+    assert set(_codes(ei.value)) == {"FLK003", "FLK001"}
+    assert _calls(ctx) == 0
+    with pytest.raises(PlanValidationError):
+        pipe.check()
+    assert _calls(ctx) == 0
+
+
+def test_verify_warn_reports_and_proceeds(table):
+    # prompts are free text (no substitution engine), so a dangling
+    # placeholder is survivable: warn mode must flag it AND execute
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL, {"prompt": "sum {missing}"}, ["text"])
+    with pytest.warns(UserWarning, match="FLK003"):
+        out = pipe.collect(verify="warn")
+    assert len(out) == len(table)
+    assert _calls(ctx) > 0
+
+
+def test_verify_off_skips_analysis(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").llm_complete(
+        "s", MODEL, {"prompt": "sum {missing}"}, ["text"])
+    out = pipe.collect()          # default verify="off": no rejection
+    assert len(out) == len(table)
+
+
+def test_bad_verify_value(table):
+    ctx = _ctx()
+    pipe = Pipeline(ctx, table, "t").limit(2)
+    with pytest.raises(ValueError, match="verify"):
+        pipe.collect(verify="paranoid")
+
+
+# ---------------------------------------------------------------------------
+# rewrite-soundness obligations, discharged in strict mode
+# ---------------------------------------------------------------------------
+def _strict_equals_naive(pipe_fn, expect_rule=None, **collect_kw):
+    """Build the pipeline twice (fresh contexts), run naive and
+    strict-verified optimized execution, and require identical rows
+    plus (optionally) a specific rewrite to have fired."""
+    naive = pipe_fn(_ctx()).collect(optimize=False)
+    pipe = pipe_fn(_ctx())
+    out = pipe.collect(verify="strict", **collect_kw)
+    assert out.rows() == naive.rows()
+    opt = pipe._plan(*([collect_kw["speculate"]]
+                       if "speculate" in collect_kw else []))
+    if expect_rule is not None:
+        assert any(rw.startswith(expect_rule) for rw in opt.rewrites), \
+            opt.rewrites
+    assert opt.obligations, "optimizer emitted no obligations"
+    return pipe, opt
+
+
+def test_strict_discharges_pushdown(table):
+    def build(ctx):
+        return (Pipeline(ctx, table, "papers")
+                .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                              ["text"])
+                .order_by("year", desc=True)
+                .limit(3))
+    _strict_equals_naive(build, expect_rule="pushdown")
+
+
+def test_strict_discharges_fusion(table):
+    def build(ctx):
+        return (Pipeline(ctx, table, "papers")
+                .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+                .llm_complete("summary", MODEL, {"prompt": "summarize"},
+                              ["text"])
+                .llm_complete_json("meta", MODEL,
+                                   {"prompt": "extract topic"}, ["text"]))
+    _strict_equals_naive(build, expect_rule="fusion")
+
+
+def test_strict_discharges_filter_reorder(table):
+    m2 = {"model": "m2", "context_window": 4096, "max_output_tokens": 8}
+
+    def build(ctx):
+        ctx.record_selectivity("inline:rare?", 1, 10)
+        ctx.record_selectivity("inline:common?", 9, 10)
+        return (Pipeline(ctx, table, "papers")
+                .llm_filter(MODEL, {"prompt": "common?"}, ["text"])
+                .llm_filter(m2, {"prompt": "rare?"}, ["text"]))
+    _strict_equals_naive(build, expect_rule="reorder_filters")
+
+
+def test_strict_discharges_prune_corpus():
+    corpus = _corpus(60)
+    flt = lambda r: r["year"] >= 2003
+
+    def build(ctx):
+        return (Pipeline(ctx, _queries(), "queries")
+                .hybrid_topk("score", EMB, "q", corpus, k=5,
+                             doc_col="content", candidate_k=10,
+                             corpus_filter=flt,
+                             corpus_filter_cols=["year"]))
+    _strict_equals_naive(build, expect_rule="prune_corpus")
+
+
+def test_strict_discharges_k_pushdown():
+    # k_pushdown bounds the fused candidate lists (recall contract:
+    # candidate_k >= k), which may legitimately perturb deep-rank
+    # fusion scores — so strict mode must discharge the contract, not
+    # assert bit-equality with the unbounded naive run
+    corpus = _corpus(60)
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, _queries(), "queries")
+            .hybrid_topk("score", EMB, "q", corpus, k=3,
+                         doc_col="content"))
+    out = pipe.collect(verify="strict")
+    assert len(out) == 2 * 3
+    opt = pipe._plan()
+    assert any(rw.startswith("k_pushdown") for rw in opt.rewrites)
+    assert any(ob.kind == "recall_contract" for ob in opt.obligations)
+
+
+def test_strict_discharges_forced_ivf():
+    from repro.retrieval.ivf import default_nlist
+    corpus = _corpus(120)
+    nl = default_nlist(120)
+
+    def build(ctx):
+        # full probing: IVF is bit-identical to the exact scan, so the
+        # naive/optimized row comparison stays exact
+        return (Pipeline(ctx, _queries(), "queries")
+                .vector_topk("score", EMB, "q", corpus, k=5,
+                             doc_col="content", ann="ivf",
+                             nlist=nl, nprobe=nl))
+    _strict_equals_naive(build, expect_rule="ann_select")
+
+
+def test_strict_discharges_ann_auto_without_execution():
+    # big-corpus auto selection: discharge on the plan alone (the 2000
+    # -row embed is not worth paying in the fast tier)
+    ctx = _ctx()
+    corpus = Table({"content": [f"passage {i} about topic {i % 9}"
+                                for i in range(2000)]})
+    pipe = (Pipeline(ctx, _queries(), "queries")
+            .vector_topk("score", EMB, "q", corpus, k=5,
+                         doc_col="content", ann="auto"))
+    opt = pipe._plan()
+    assert any(rw.startswith("ann_select") for rw in opt.rewrites)
+    assert verify_rewrites(ctx, _queries(), pipe.nodes, opt) == []
+
+
+def test_strict_discharges_shared_corpus_embed():
+    corpus = _corpus(40)
+
+    def build(ctx):
+        return (Pipeline(ctx, _queries(), "queries")
+                .vector_topk("s1", EMB, "q", corpus, k=2,
+                             doc_col="content")
+                .vector_topk("s2", EMB, "q", corpus, k=3,
+                             doc_col="content"))
+    pipe, opt = _strict_equals_naive(build)
+    assert any(ob.kind == "index_shared" for ob in opt.obligations)
+
+
+def test_strict_discharges_speculative_chain(table):
+    # distinct models per member keep the chain out of fusion's reach,
+    # matching the speculative-execution test harness
+    m2 = {"model": "m2", "context_window": 4096, "max_output_tokens": 8}
+
+    def build(ctx):
+        return (Pipeline(ctx, table, "papers")
+                .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+                .llm_filter(m2, {"prompt": "recent?"}, ["text"]))
+    pipe, opt = _strict_equals_naive(build, speculate="always")
+    assert any(n.op == "llm_spec_chain" for n in opt.nodes)
+    assert any(ob.payload.get("spec_chain") for ob in opt.obligations
+               if ob.kind == "mask_equivalence")
+
+
+# ---------------------------------------------------------------------------
+# FLK010: a tampered plan fails obligation discharge
+# ---------------------------------------------------------------------------
+def test_flk010_tampered_commute_is_caught(table):
+    import copy
+    ctx = _ctx()
+    # limit CAN hoist over llm_complete (pushdown fires) but NOT over a
+    # filter — forging the obligation's semantic node to the filter
+    # must fail the independent legality check
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+            .llm_complete("summary", MODEL, {"prompt": "sum"}, ["text"])
+            .limit(3))
+    opt = pipe._plan()
+    assert any(rw.startswith("pushdown") for rw in opt.rewrites)
+    assert verify_rewrites(ctx, table, pipe.nodes, opt) == []
+    # forge the obligation: claim the limit was hoisted over a filter
+    # whose ban set forbids it
+    bad = copy.copy(opt)
+    forged = []
+    for ob in opt.obligations:
+        if ob.kind == "commute":
+            p = dict(ob.payload)
+            p["sem_node"] = pipe.nodes[1]          # the llm_filter
+            ob = type(ob)(ob.rule, "commute", p)
+        forged.append(ob)
+    bad.obligations = forged
+    diags = verify_rewrites(ctx, table, pipe.nodes, bad)
+    assert diags and all(d.code == "FLK010" for d in diags)
+
+
+def test_flk010_dropped_filter_is_caught(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_filter(MODEL, {"prompt": "about joins?"}, ["text"])
+            .llm_complete("summary", MODEL, {"prompt": "sum"}, ["text"]))
+    opt = pipe._plan()
+    assert verify_rewrites(ctx, table, pipe.nodes, opt) == []
+    # an "optimized" plan that silently dropped the filter must fail
+    # the mask-equivalence / schema obligations
+    import copy
+    bad = copy.copy(opt)
+    bad.nodes = [n for n in opt.nodes if n.op != "llm_fused"]
+    diags = verify_rewrites(ctx, table, pipe.nodes, bad)
+    assert any(d.code == "FLK010" for d in diags)
+
+
+def test_strict_collect_catches_tampered_plan(table):
+    ctx = _ctx()
+    pipe = (Pipeline(ctx, table, "papers")
+            .llm_complete("summary", MODEL, {"prompt": "sum"}, ["text"])
+            .limit(3))
+    opt = pipe._plan()              # memoised: collect() reuses this
+    for ob in opt.obligations:
+        if ob.kind == "commute":
+            ob.payload["sem_node"] = pipe.nodes[1]
+            ob.payload["rel_op"] = "order_by"
+    opt.obligations.append(type(opt.obligations[0])(
+        "forged", "recall_contract",
+        {"key": "nope", "k": 5, "candidate_k": 1}))
+    with pytest.raises(PlanValidationError, match="FLK010"):
+        pipe.collect(verify="strict")
+
+
+# ---------------------------------------------------------------------------
+# property test: random valid plans analyze + verify cleanly
+# ---------------------------------------------------------------------------
+_STEPS = ["filter_join", "filter_recent", "complete", "complete_json",
+          "order_year", "order_id", "limit3", "limit5"]
+
+
+def _apply(pipe, step, i):
+    if step == "filter_join":
+        return pipe.llm_filter(MODEL, {"prompt": "about joins?"},
+                               ["text"])
+    if step == "filter_recent":
+        return pipe.llm_filter(MODEL, {"prompt": "recent work?"},
+                               ["text"])
+    if step == "complete":
+        return pipe.llm_complete(f"c{i}", MODEL,
+                                 {"prompt": f"summarize {i}"}, ["text"])
+    if step == "complete_json":
+        return pipe.llm_complete_json(f"j{i}", MODEL,
+                                      {"prompt": f"extract {i}"},
+                                      ["text"])
+    if step == "order_year":
+        return pipe.order_by("year", desc=True)
+    if step == "order_id":
+        return pipe.order_by("id")
+    return pipe.limit(3 if step == "limit3" else 5)
+
+
+def test_property_random_plans_analyze_and_verify():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the optional hypothesis dependency")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(steps=st.lists(st.sampled_from(_STEPS), min_size=1,
+                          max_size=6),
+           speculate=st.sampled_from([False, "always"]))
+    def prop(steps, speculate):
+        _check_random_plan(steps, speculate)
+
+    prop()
+
+
+def _check_random_plan(steps, speculate):
+    ctx = _ctx()
+    table = Table({
+        "id": list(range(10)),
+        "text": [f"paper {i} about {'join' if i % 2 else 'index'}"
+                 for i in range(10)],
+        "year": [2000 + i for i in range(10)],
+    })
+    pipe = Pipeline(ctx, table, "t")
+    for i, s in enumerate(steps):
+        pipe = _apply(pipe, s, i)
+    # layer 1+2: valid plans produce no error diagnostics
+    assert analyze_plan(ctx, table, pipe.nodes).errors == []
+    # layer 3: every optimizer output discharges its obligations
+    opt = pipe._plan(speculate)
+    assert verify_rewrites(ctx, table, pipe.nodes, opt) == []
+    # schema inference is total over optimized nodes too
+    assert len(infer_schema(table, opt.nodes)) == len(opt.nodes)

@@ -1,0 +1,229 @@
+"""flocklint rule tests: each rule fires on a minimal offending
+source, respects pragmas, and the real tree under ``src/`` is clean
+(the CI lint gate must stay green)."""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import flocklint  # noqa: E402
+
+
+def _lint(source, rel="repro/core/scheduler.py"):
+    rel = Path(rel)
+    return flocklint.lint_source(source, rel, rel)
+
+
+def _codes(violations):
+    return [v.code for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# FLKL101: wall-clock
+# ---------------------------------------------------------------------------
+def test_time_time_flagged_everywhere():
+    src = "import time\nt0 = time.time()\n"
+    assert _codes(_lint(src, "repro/launch/serve.py")) == ["FLKL101"]
+
+
+def test_time_time_as_default_factory_flagged():
+    src = ("import time\nfrom dataclasses import field\n"
+           "x = field(default_factory=time.time)\n")
+    assert _codes(_lint(src, "repro/serving/engine.py")) == ["FLKL101"]
+
+
+def test_monotonic_not_flagged():
+    src = "import time\nt0 = time.monotonic()\n"
+    assert _lint(src, "repro/launch/serve.py") == []
+
+
+def test_pragma_same_line():
+    src = ("import time\n"
+           "ts = time.time()  # flocklint: ignore[FLKL101]\n")
+    assert _lint(src, "repro/core/resources.py") == []
+
+
+def test_pragma_preceding_line():
+    src = ("import time\n"
+           "# wall-clock manifest stamp  # flocklint: ignore[FLKL101]\n"
+           "ts = time.time()\n")
+    assert _lint(src, "repro/core/resources.py") == []
+
+
+def test_pragma_wrong_code_does_not_suppress():
+    src = ("import time\n"
+           "ts = time.time()  # flocklint: ignore[FLKL105]\n")
+    assert _codes(_lint(src, "repro/core/resources.py")) == ["FLKL101"]
+
+
+# ---------------------------------------------------------------------------
+# FLKL102: blocking call under a scheduler lock
+# ---------------------------------------------------------------------------
+def test_dispatch_under_lock_flagged():
+    src = ("def f(self, pending, rows):\n"
+           "    with self._lock:\n"
+           "        out = pending.call(rows)\n")
+    assert _codes(_lint(src)) == ["FLKL102"]
+
+
+def test_sleep_under_lock_flagged():
+    src = ("import time\n"
+           "def f(self):\n"
+           "    with self._pack_lock:\n"
+           "        time.sleep(0.1)\n")
+    assert _codes(_lint(src)) == ["FLKL102"]
+
+
+def test_dispatch_outside_lock_ok():
+    src = ("def f(self, pending, rows):\n"
+           "    with self._lock:\n"
+           "        self._executing += 1\n"
+           "    out = pending.call(rows)\n")
+    assert _lint(src) == []
+
+
+def test_condition_wait_under_lock_ok():
+    # Condition.wait releases the lock while blocked — not a violation
+    src = ("def f(self):\n"
+           "    with self._lock:\n"
+           "        self._cond.wait()\n")
+    assert _lint(src) == []
+
+
+def test_nested_function_under_lock_ok():
+    # a function DEFINED under a lock does not run under it
+    src = ("def f(self, job, batch):\n"
+           "    with self._lock:\n"
+           "        def later():\n"
+           "            return job.run(batch)\n"
+           "        self._thunk = later\n")
+    assert _lint(src) == []
+
+
+def test_rule_scoped_to_scheduler():
+    src = ("def f(self, pending, rows):\n"
+           "    with self._lock:\n"
+           "        out = pending.call(rows)\n")
+    assert _lint(src, "repro/engine/pipeline.py") == []
+
+
+# ---------------------------------------------------------------------------
+# FLKL103: lock order
+# ---------------------------------------------------------------------------
+def test_nested_locks_without_declaration_flagged():
+    src = ("def f(self, job):\n"
+           "    with self._lock:\n"
+           "        with job._lock:\n"
+           "            job.n += 1\n")
+    assert _codes(_lint(src)) == ["FLKL103"]
+
+
+def test_nested_locks_following_declared_order_ok():
+    src = ("# flocklint: lock-order: _lock < job._lock\n"
+           "def f(self, job):\n"
+           "    with self._lock:\n"
+           "        with job._lock:\n"
+           "            job.n += 1\n")
+    assert _lint(src) == []
+
+
+def test_nested_locks_violating_declared_order_flagged():
+    src = ("# flocklint: lock-order: _lock < job._lock\n"
+           "def f(self, job):\n"
+           "    with job._lock:\n"
+           "        with self._lock:\n"
+           "            self.n += 1\n")
+    assert _codes(_lint(src)) == ["FLKL103"]
+
+
+def test_undeclared_lock_in_nesting_flagged():
+    src = ("# flocklint: lock-order: _lock < job._lock\n"
+           "def f(self, other):\n"
+           "    with self._lock:\n"
+           "        with other._mystery_lock:\n"
+           "            pass\n")
+    assert _codes(_lint(src)) == ["FLKL103"]
+
+
+# ---------------------------------------------------------------------------
+# FLKL104: atomic sidecar staging
+# ---------------------------------------------------------------------------
+def test_with_suffix_tmp_flagged():
+    src = 'tmp = path.with_suffix(".tmp")\n'
+    assert _codes(_lint(src, "repro/core/cache.py")) == ["FLKL104"]
+
+
+def test_os_rename_flagged():
+    src = "import os\nos.rename(a, b)\n"
+    assert _codes(_lint(src, "repro/retrieval/store.py")) == ["FLKL104"]
+
+
+def test_full_name_tmp_and_replace_ok():
+    src = ('tmp = path.with_name(path.name + ".tmp")\n'
+           "tmp.replace(path)\n")
+    assert _lint(src, "repro/core/cache.py") == []
+
+
+def test_rule_scoped_to_core_and_retrieval():
+    src = 'tmp = path.with_suffix(".tmp")\n'
+    assert _lint(src, "repro/launch/dryrun.py") == []
+
+
+# ---------------------------------------------------------------------------
+# FLKL105: broad except
+# ---------------------------------------------------------------------------
+def test_bare_except_flagged():
+    src = "try:\n    f()\nexcept:\n    pass\n"
+    assert _codes(_lint(src, "repro/core/cache.py")) == ["FLKL105"]
+
+
+def test_broad_exception_flagged():
+    src = "try:\n    f()\nexcept Exception:\n    pass\n"
+    assert _codes(_lint(src, "repro/engine/pipeline.py")) == ["FLKL105"]
+
+
+def test_base_exception_in_tuple_flagged():
+    src = "try:\n    f()\nexcept (ValueError, BaseException):\n    pass\n"
+    assert _codes(_lint(src, "repro/retrieval/vector.py")) == ["FLKL105"]
+
+
+def test_narrow_except_ok():
+    src = ("try:\n    f()\nexcept (ImportError, AttributeError):\n"
+           "    pass\n")
+    assert _lint(src, "repro/core/cache.py") == []
+
+
+def test_broad_except_with_pragma_ok():
+    src = ("try:\n    f()\n"
+           "# re-raised on the caller  # flocklint: ignore[FLKL105]\n"
+           "except BaseException as exc:\n    raise\n")
+    assert _lint(src, "repro/core/scheduler.py") == []
+
+
+def test_broad_except_outside_scope_ok():
+    src = "try:\n    f()\nexcept Exception:\n    pass\n"
+    assert _lint(src, "repro/launch/dryrun.py") == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean — this is the CI gate
+# ---------------------------------------------------------------------------
+def test_src_tree_has_zero_violations():
+    violations = []
+    for path in sorted((REPO / "src").rglob("*.py")):
+        rel = flocklint._rel_to_package(path)
+        violations.extend(
+            flocklint.lint_source(path.read_text(encoding="utf-8"),
+                                  path, rel))
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_cli_exit_codes(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("import time\nt = time.monotonic()\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import time\nt = time.time()\n")
+    assert flocklint.main([str(clean)]) == 0
+    assert flocklint.main([str(dirty)]) == 1

@@ -1,0 +1,295 @@
+#!/usr/bin/env python
+"""flocklint — repo-specific AST lint rules for flock-jax.
+
+Encodes the bug classes that earlier PRs fixed by hand as permanent,
+mechanical rules (stdlib ``ast`` only — no third-party deps):
+
+  FLKL101  wall-clock in duration paths: any ``time.time`` reference.
+           Durations must use ``time.monotonic()``; genuine wall-clock
+           timestamps (manifests, catalog ``created_at``) carry a
+           pragma justifying the exemption.  Scope: all of ``src/``.
+  FLKL102  provider dispatch / blocking call while holding a scheduler
+           lock: ``.call(...)``, ``.run(...)``, ``.join(...)``,
+           ``time.sleep`` / ``.sleep(...)``, ``.result(...)`` inside a
+           ``with *lock:`` body.  (``Condition.wait`` is exempt — it
+           releases the lock.)  Scope: ``core/scheduler.py``.
+  FLKL103  lock-acquisition order: nested ``with *lock:`` blocks must
+           follow the file's ``# flocklint: lock-order: a < b < c``
+           declaration; nesting without a declaration is a violation.
+           Scope: ``core/scheduler.py``.
+  FLKL104  non-atomic sidecar staging: ``.with_suffix(".tmp")`` (strips
+           the last suffix, so multi-dot sidecars collide — use the
+           full-name ``_tmp_path`` helper) and ``os.rename`` (use
+           ``os.replace`` / ``Path.replace`` for atomic overwrite).
+           Scope: ``core/``, ``retrieval/``.
+  FLKL105  bare / broad ``except`` (``except:``, ``except Exception``,
+           ``except BaseException``) — narrow it, or pragma with the
+           reason the broad catch is load-bearing (e.g. re-raised on
+           the caller thread).  Scope: ``core/``, ``engine/``,
+           ``retrieval/``.
+
+Suppression: ``# flocklint: ignore[CODE]`` (or ``ignore[C1,C2]``) on
+the violating line or the line directly above it.
+
+Usage::
+
+    python tools/flocklint.py src/            # exit 1 on any violation
+    python tools/flocklint.py file.py dir/ --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator, List, Optional, Sequence
+
+_PRAGMA_RE = re.compile(r"#\s*flocklint:\s*ignore\[([A-Z0-9,\s]+)\]")
+_LOCK_ORDER_RE = re.compile(r"#\s*flocklint:\s*lock-order:\s*(.+)$")
+
+# FLKL102: attribute-call names that block (or dispatch to a provider)
+# and therefore must never run under a scheduler lock.  ``wait`` is
+# deliberately absent: Condition.wait releases the lock while blocked.
+_BLOCKING_ATTRS = {"call", "run", "join", "sleep", "result"}
+
+RULES = {
+    "FLKL101": "time.time used (durations must use time.monotonic)",
+    "FLKL102": "blocking/dispatch call while holding a scheduler lock",
+    "FLKL103": "nested lock acquisition violates declared lock-order",
+    "FLKL104": "non-atomic sidecar staging (.with_suffix('.tmp') / os.rename)",
+    "FLKL105": "bare or broad except clause",
+}
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: Path
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _pragma_codes(lines: Sequence[str], lineno: int) -> set:
+    """Codes suppressed at ``lineno`` (1-based): pragmas on the line
+    itself or on the line directly above count."""
+    codes: set = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _PRAGMA_RE.search(lines[ln - 1])
+            if m:
+                codes.update(c.strip() for c in m.group(1).split(","))
+    return codes
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    """Render ``a.b.c`` attribute chains; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _lock_name(expr: ast.expr) -> Optional[str]:
+    """Normalized lock identity for a ``with`` context expression, or
+    None when the expression is not a lock acquisition.  ``self.`` is
+    stripped and at most the last two components kept, so
+    ``s.job._lock`` and ``job._lock`` unify while ``self._lock`` and
+    ``job._lock`` stay distinct."""
+    name = _dotted(expr)
+    if name is None or not name.split(".")[-1].endswith("lock"):
+        return None
+    parts = [p for p in name.split(".") if p != "self"]
+    return ".".join(parts[-2:])
+
+
+def _in_scope(rel: Path, *prefixes: str) -> bool:
+    parts = rel.parts
+    return any(p in parts for p in prefixes)
+
+
+# ---------------------------------------------------------------------------
+# per-rule visitors
+# ---------------------------------------------------------------------------
+class _Walker(ast.NodeVisitor):
+    """Single-pass walker that runs every enabled rule, tracking the
+    stack of locks held at each node (``with``-statement nesting)."""
+
+    def __init__(self, path: Path, rel: Path, lines: Sequence[str],
+                 lock_order: Optional[List[str]]):
+        self.path = path
+        self.rel = rel
+        self.lines = lines
+        self.lock_order = lock_order
+        self.lock_stack: List[str] = []
+        self.out: List[Violation] = []
+        self.scheduler = rel.name == "scheduler.py" and _in_scope(rel, "core")
+        self.atomic_scope = _in_scope(rel, "core", "retrieval")
+        self.except_scope = _in_scope(rel, "core", "engine", "retrieval")
+
+    def _emit(self, code: str, lineno: int, message: str):
+        if code not in _pragma_codes(self.lines, lineno):
+            self.out.append(Violation(self.path, lineno, code, message))
+
+    # ---- FLKL101 ----------------------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute):
+        if (node.attr == "time" and isinstance(node.value, ast.Name)
+                and node.value.id == "time"):
+            self._emit("FLKL101", node.lineno,
+                       "time.time: use time.monotonic() for durations "
+                       "(pragma wall-clock timestamps)")
+        self.generic_visit(node)
+
+    # ---- FLKL102 / FLKL104 ------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        dotted = _dotted(node.func)
+        if self.scheduler and self.lock_stack:
+            attr = (node.func.attr
+                    if isinstance(node.func, ast.Attribute) else None)
+            if attr in _BLOCKING_ATTRS or dotted == "time.sleep":
+                self._emit("FLKL102", node.lineno,
+                           f"blocking call .{attr or 'sleep'}(...) while "
+                           f"holding {self.lock_stack[-1]}")
+        if self.atomic_scope:
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "with_suffix" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and node.args[0].value == ".tmp"):
+                self._emit("FLKL104", node.lineno,
+                           '.with_suffix(".tmp") mangles multi-dot '
+                           "sidecar names: use cache._tmp_path")
+            if dotted == "os.rename":
+                self._emit("FLKL104", node.lineno,
+                           "os.rename: use os.replace for atomic "
+                           "overwrite semantics")
+        self.generic_visit(node)
+
+    # ---- FLKL103 + lock-stack maintenance ---------------------------------
+    def visit_With(self, node: ast.With):
+        acquired = [ln for item in node.items
+                    if (ln := _lock_name(item.context_expr)) is not None]
+        for ln in acquired:
+            if self.lock_stack:
+                self._check_order(self.lock_stack[-1], ln, node.lineno)
+        self.lock_stack.extend(acquired)
+        self.generic_visit(node)
+        del self.lock_stack[len(self.lock_stack) - len(acquired):]
+
+    def _check_order(self, outer: str, inner: str, lineno: int):
+        if self.lock_order is None:
+            self._emit("FLKL103", lineno,
+                       f"nested lock acquisition ({outer} -> {inner}) "
+                       "but no '# flocklint: lock-order:' declaration")
+            return
+        try:
+            if self.lock_order.index(outer) > self.lock_order.index(inner):
+                self._emit("FLKL103", lineno,
+                           f"lock order violation: {outer} held while "
+                           f"acquiring {inner} (declared: "
+                           f"{' < '.join(self.lock_order)})")
+        except ValueError:
+            missing = outer if outer not in self.lock_order else inner
+            self._emit("FLKL103", lineno,
+                       f"lock {missing!r} not in the declared lock-order")
+
+    # nested function bodies do not run under the enclosing lock
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        saved, self.lock_stack = self.lock_stack, []
+        self.generic_visit(node)
+        self.lock_stack = saved
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # ---- FLKL105 ----------------------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if self.except_scope:
+            broad = None
+            if node.type is None:
+                broad = "bare except:"
+            else:
+                types = (node.type.elts if isinstance(node.type, ast.Tuple)
+                         else [node.type])
+                for t in types:
+                    if (isinstance(t, ast.Name)
+                            and t.id in ("Exception", "BaseException")):
+                        broad = f"except {t.id}"
+                        break
+            if broad:
+                self._emit("FLKL105", node.lineno,
+                           f"{broad}: narrow to the expected exceptions "
+                           "or pragma with a justification")
+        self.generic_visit(node)
+
+
+def _parse_lock_order(lines: Sequence[str]) -> Optional[List[str]]:
+    for line in lines:
+        m = _LOCK_ORDER_RE.search(line)
+        if m:
+            return [p.strip() for p in re.split(r"[<,]", m.group(1))
+                    if p.strip()]
+    return None
+
+
+def lint_source(source: str, path: Path, rel: Path) -> List[Violation]:
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        return [Violation(path, exc.lineno or 0, "FLKL000",
+                          f"syntax error: {exc.msg}")]
+    lines = source.splitlines()
+    walker = _Walker(path, rel, lines, _parse_lock_order(lines))
+    walker.visit(tree)
+    return sorted(walker.out, key=lambda v: (v.line, v.code))
+
+
+def _iter_files(targets: Sequence[str]) -> Iterator[Path]:
+    for t in targets:
+        p = Path(t)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def _rel_to_package(path: Path) -> Path:
+    """Path relative to the package root (the part after ``src/``), so
+    scope checks see ``repro/core/...`` regardless of invocation cwd."""
+    parts = path.parts
+    if "src" in parts:
+        return Path(*parts[parts.index("src") + 1:])
+    return path
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("targets", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for code, desc in sorted(RULES.items()):
+            print(f"{code}  {desc}")
+        return 0
+    violations: List[Violation] = []
+    n_files = 0
+    for path in _iter_files(args.targets or ["src"]):
+        n_files += 1
+        source = path.read_text(encoding="utf-8")
+        violations.extend(lint_source(source, path, _rel_to_package(path)))
+    for v in violations:
+        print(v)
+    print(f"flocklint: {n_files} file(s), {len(violations)} violation(s)",
+          file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
