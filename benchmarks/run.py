@@ -274,6 +274,21 @@ def bench_speculative():
       * explain()'s calibrated wall-clock estimate for the speculative
         plan is within tolerance of the measured wall-clock,
       * speculative wall-clock beats serial by the configured floor.
+
+    Two further scenarios exercise the cross-operator speculation
+    shapes under ``speculate="auto"``:
+
+      * **filter->map**: an ``llm_complete`` downstream of a 0.5
+        selectivity ``llm_filter`` dispatches over the filter's full
+        input concurrently with the mask; gated on
+        ``wall_spec <= BENCH_SPEC_WALL_TOL x wall_serial``
+        (default 0.6),
+      * **retrieval->rerank**: an ``llm_rerank`` downstream of
+        ``hybrid_topk`` warms its window cache over the BM25-predicted
+        candidates while the dense embeds run; the corpus is crafted so
+        the BM25 and fused orders agree (asserted as a precondition),
+        gated on ``wall_spec <= BENCH_SPEC_RERANK_WALL_TOL x
+        wall_serial`` (default 0.9).
     """
     import re as _re
 
@@ -359,6 +374,127 @@ def bench_speculative():
     floor = float(os.environ.get("BENCH_SPECULATIVE_MIN_SPEEDUP", "1.8"))
     speedup = dt_serial / dt_spec
 
+    # -- scenario 2: map past filter at selectivity 0.5 -----------------
+    table2 = Table({"text": [
+        f"doc {i} {'alpha' if i % 2 == 0 else 'omega'} "
+        f"with a body of text" for i in range(n)]})
+    map_model = {"model": "spec-map", "context_window": 100_000,
+                 "max_output_tokens": 16, "max_concurrency": 16}
+
+    def build_map(ctx):
+        return (Pipeline(ctx, table2, "docs")
+                .llm_filter(model(1), {"prompt": "contains alpha"},
+                            ["text"])
+                .llm_complete("summary", map_model,
+                              {"prompt": "summarize"}, ["text"]))
+
+    with RequestScheduler() as sched:
+        ctx = SemanticContext(
+            provider=MockProvider(behaviour, latency_per_call_s=latency),
+            scheduler=sched, enable_cache=False, enable_dedup=False,
+            max_batch=24)
+        # warmup: records the 0.5 mask density and per-model latency
+        build_map(ctx).collect(speculate=False)
+
+        c0 = ctx.provider.stats.calls
+        t0 = time.perf_counter()
+        rows_m_serial = build_map(ctx).collect(speculate=False).rows()
+        dt_m_serial = time.perf_counter() - t0
+        req_m_serial = ctx.provider.stats.calls - c0
+
+        pipe_m = build_map(ctx)
+        t0 = time.perf_counter()
+        rows_m_spec = pipe_m.collect(speculate="auto").rows()
+        dt_m_spec = time.perf_counter() - t0
+        req_m_spec = ctx.provider.stats.calls - c0 - req_m_serial
+        cancelled = sched.stats.spec_cancelled
+
+    assert rows_m_spec == rows_m_serial, \
+        "speculative map changed the output tuple stream"
+    plan_m = pipe_m._plan("auto")
+    dm = [x for x in plan_m.spec_decisions
+          if x.kind == "map" and x.chosen]
+    assert dm, "planner did not choose map speculation: " + "; ".join(
+        str(x) for x in plan_m.spec_decisions)
+    wasted_m = req_m_spec - req_m_serial
+    assert wasted_m <= dm[0].wasted_requests, \
+        f"measured map waste {wasted_m} exceeds the predicted budget " \
+        f"{dm[0].wasted_requests}"
+    wall_tol = float(os.environ.get("BENCH_SPEC_WALL_TOL", "0.6"))
+    _row("speculative_map_serial", dt_m_serial * 1e6 / n,
+         f"requests={req_m_serial}")
+    _row("speculative_map_spec", dt_m_spec * 1e6 / n,
+         f"requests={req_m_spec} wasted={wasted_m} "
+         f"cancelled={cancelled} "
+         f"speedup={dt_m_serial / dt_m_spec:.1f}x")
+
+    # -- scenario 3: retrieval-aware rerank -----------------------------
+    # the corpus is crafted (per-doc salts searched offline) so the
+    # mock embedding similarities RANK the matching docs in the same
+    # order as their BM25 term-frequency scores: the fused top-k then
+    # equals the BM25-predicted top-k and warmup window-cache entries
+    # byte-match the authoritative rerank's windows
+    k_rr, cand_rr = 6, 12
+    docs_rr = [
+        "join algorithms " * (k_rr - i) + f"candidate document {i} s{s}"
+        for i, s in enumerate((0, 91, 9, 41, 51, 1))
+    ] + [
+        f"unrelated storage passage number {i} s{s}"
+        for i, s in zip(range(6, 24),
+                        (1, 3, 0, 0, 0, 0, 0, 0, 0, 1, 1, 0,
+                         0, 0, 0, 0, 2, 1))
+    ]
+    docs_rr = [t.strip() for t in docs_rr]
+    corpus_rr = Table({"content": docs_rr})
+    queries_rr = Table({"q": ["join algorithms"], "qid": [0]})
+    emb_model = {"model": "spec-emb", "embedding_dim": 16,
+                 "context_window": 4096}
+    rr_model = {"model": "spec-rr", "context_window": 100_000,
+                "max_output_tokens": 16, "max_concurrency": 8}
+
+    def build_rr(ctx):
+        return (Pipeline(ctx, queries_rr, "queries")
+                .hybrid_topk("score", emb_model, "q", corpus_rr,
+                             k=k_rr, doc_col="content",
+                             candidate_k=cand_rr)
+                .llm_rerank(rr_model, {"prompt": "most relevant"},
+                            ["content"], by="q"))
+
+    # precondition: BM25 order must match the fused order, else the
+    # warmup cannot hit and the scenario silently degrades to serial
+    pre = (Pipeline(SemanticContext(provider=MockProvider()),
+                    queries_rr, "queries")
+           .hybrid_topk("score", emb_model, "q", corpus_rr, k=k_rr,
+                        doc_col="content", candidate_k=cand_rr)
+           .collect(speculate=False))
+    assert [r["content"] for r in pre.rows()] == docs_rr[:k_rr], \
+        "crafted corpus drifted: fused top-k no longer equals the " \
+        "BM25 prediction (re-search the per-doc salts)"
+
+    def run_rr(speculate):
+        with RequestScheduler() as sched:
+            ctx = SemanticContext(
+                provider=MockProvider(latency_per_call_s=latency),
+                scheduler=sched, speculate=speculate)
+            pipe = build_rr(ctx)
+            t0 = time.perf_counter()
+            out = pipe.collect()
+            dt = time.perf_counter() - t0
+            return out.rows(), dt, pipe
+
+    rows_r_serial, dt_r_serial, _ = run_rr(False)
+    rows_r_spec, dt_r_spec, pipe_r = run_rr("auto")
+    assert rows_r_spec == rows_r_serial, \
+        "speculative rerank changed the reranked tuple stream"
+    assert any(nd.op == "spec_rerank"
+               for nd in pipe_r._executed_nodes), \
+        "planner did not choose rerank speculation"
+    rr_tol = float(os.environ.get("BENCH_SPEC_RERANK_WALL_TOL", "0.9"))
+    _row("speculative_rerank_serial", dt_r_serial * 1e6,
+         f"k={k_rr} candidate_k={cand_rr}")
+    _row("speculative_rerank_spec", dt_r_spec * 1e6,
+         f"overlap={1 - dt_r_spec / dt_r_serial:.0%}")
+
     results = {
         "latency_per_call_s": latency, "rows": n, "chain": 3,
         "serial": {"wall_s": round(dt_serial, 4), "requests": req_serial,
@@ -372,6 +508,27 @@ def bench_speculative():
         "wasted_budget": d.wasted_requests,
         "speedup": round(speedup, 2),
         "est_wall_error": round(est_err, 3),
+        # cross-operator scenarios (picked up by TRAJECTORY.json)
+        "wall_serial_s": round(dt_m_serial, 4),
+        "wall_spec_s": round(dt_m_spec, 4),
+        "spec_cancelled": cancelled,
+        "filter_map": {
+            "selectivity": 0.5,
+            "wall_serial_s": round(dt_m_serial, 4),
+            "wall_spec_s": round(dt_m_spec, 4),
+            "requests_serial": req_m_serial,
+            "requests_spec": req_m_spec,
+            "wasted_requests": wasted_m,
+            "wasted_budget": dm[0].wasted_requests,
+            "spec_cancelled": cancelled,
+            "wall_ratio": round(dt_m_spec / dt_m_serial, 3),
+        },
+        "rerank": {
+            "wall_serial_s": round(dt_r_serial, 4),
+            "wall_spec_s": round(dt_r_spec, 4),
+            "wall_ratio": round(dt_r_spec / dt_r_serial, 3),
+            "overlap": round(1 - dt_r_spec / dt_r_serial, 3),
+        },
     }
     out_path = Path(__file__).resolve().parent / "BENCH_speculative.json"
     out_path.write_text(json.dumps(results, indent=1))
@@ -380,15 +537,23 @@ def bench_speculative():
          f"requests={req_serial} waves={d.serial_waves}")
     _row("speculative_spec", dt_spec * 1e6 / n,
          f"requests={req_spec} waves={d.spec_waves} "
-         f"speedup={speedup:.1f}x wasted={wasted}/{d.wasted_requests}")
+         f"speedup={speedup:.1f}x wasted={wasted}/{d.wasted_requests} "
+         f"json={out_path.name}")
     _row("speculative_estimate", est_wall * 1e6,
-         f"est_wall_error={est_err:.1%} json={out_path.name}")
+         f"est_wall_error={est_err:.1%}")
     assert est_err <= tol, \
         f"calibrated wall estimate {est_wall:.3f}s is {est_err:.0%} " \
         f"off measured {dt_spec:.3f}s (tolerance {tol:.0%})"
     assert speedup >= floor, \
         f"expected >={floor}x wall-clock reduction from speculation, " \
         f"got {speedup:.1f}x"
+    assert dt_m_spec <= wall_tol * dt_m_serial, \
+        f"filter->map speculative wall {dt_m_spec:.3f}s exceeds " \
+        f"{wall_tol:.2f}x serial wall {dt_m_serial:.3f}s"
+    assert dt_r_spec <= rr_tol * dt_r_serial, \
+        f"retrieval->rerank speculative wall {dt_r_spec:.3f}s shows " \
+        f"no overlap vs serial {dt_r_serial:.3f}s " \
+        f"(tolerance {rr_tol:.2f}x)"
     return speedup
 
 

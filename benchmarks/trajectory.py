@@ -1,0 +1,206 @@
+"""Fold the per-bench ``BENCH_*.json`` snapshots into one committed
+performance trajectory, and gate CI on regressions against it.
+
+``TRAJECTORY.json`` holds a series of labelled snapshots — one per PR
+(the label defaults to ``git rev-list --count HEAD``) — each mapping
+bench name to its flattened scalar metrics.  Re-running under the same
+label replaces that entry, so the file stays one line per PR no matter
+how many local runs precede the commit.
+
+Two modes:
+
+``python benchmarks/trajectory.py``
+    Aggregate: read every ``BENCH_*.json`` next to this file and
+    append/replace the current label's snapshot in ``TRAJECTORY.json``.
+
+``python benchmarks/trajectory.py --check``
+    Gate: compare the freshly generated ``BENCH_*.json`` files against
+    the LAST committed snapshot.  Each gated metric (see
+    ``GATED_METRICS``) may drift in its bad direction by at most the
+    bench's relative tolerance — ``BENCH_<NAME>_TOL`` env var,
+    default ``DEFAULT_TOL`` — before the exit code turns nonzero.
+    Metrics absent from the baseline (a brand-new bench or field) pass:
+    the NEXT aggregated snapshot starts gating them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+BENCH_DIR = Path(__file__).resolve().parent
+TRAJECTORY_PATH = BENCH_DIR / "TRAJECTORY.json"
+
+DEFAULT_TOL = 0.25
+
+# bench -> [(dotted metric path, good direction)].  "higher" metrics
+# regress by dropping, "lower" metrics regress by growing; everything
+# else recorded in the trajectory is context, not a gate.
+GATED_METRICS: Dict[str, List[Tuple[str, str]]] = {
+    "scheduler": [("concurrency_4.speedup", "higher")],
+    "speculative": [("speedup", "higher"),
+                    ("filter_map.wall_ratio", "lower"),
+                    ("rerank.wall_ratio", "lower")],
+    "copack": [("copack_on.requests", "lower"),
+               ("copack_on.mean_fill", "higher")],
+    "rag": [("embed_requests_on", "lower")],
+    "ann": [("recall_at_k", "higher"),
+            ("ivf_speedup_vs_exact", "higher")],
+}
+
+
+def _flatten(obj, prefix: str = "") -> Dict[str, float]:
+    """Scalar leaves of a nested bench dict as dotted paths."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for key, val in obj.items():
+            path = f"{prefix}.{key}" if prefix else str(key)
+            out.update(_flatten(val, path))
+    elif isinstance(obj, bool):
+        out[prefix] = float(obj)
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def _load_benches() -> Dict[str, Dict[str, float]]:
+    benches: Dict[str, Dict[str, float]] = {}
+    for path in sorted(BENCH_DIR.glob("BENCH_*.json")):
+        name = path.stem[len("BENCH_"):]
+        try:
+            benches[name] = _flatten(json.loads(path.read_text()))
+        except (json.JSONDecodeError, OSError) as exc:
+            print(f"trajectory: skipping unreadable {path.name}: {exc}",
+                  file=sys.stderr)
+    return benches
+
+
+def _default_label() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-list", "--count", "HEAD"], cwd=BENCH_DIR,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.TimeoutExpired):
+        pass
+    return "0"
+
+
+def _load_trajectory() -> dict:
+    if TRAJECTORY_PATH.exists():
+        try:
+            doc = json.loads(TRAJECTORY_PATH.read_text())
+            if isinstance(doc, dict) and isinstance(
+                    doc.get("series"), list):
+                return doc
+        except json.JSONDecodeError:
+            print("trajectory: corrupt TRAJECTORY.json, starting fresh",
+                  file=sys.stderr)
+    return {"series": []}
+
+
+def aggregate(label: Optional[str] = None) -> int:
+    label = label or _default_label()
+    benches = _load_benches()
+    if not benches:
+        print("trajectory: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    doc = _load_trajectory()
+    entry = {"label": label, "benches": benches}
+    series = [e for e in doc["series"] if e.get("label") != label]
+    series.append(entry)
+    doc["series"] = series
+    TRAJECTORY_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    n_metrics = sum(len(m) for m in benches.values())
+    print(f"trajectory: recorded label={label} "
+          f"({len(benches)} benches, {n_metrics} metrics) "
+          f"-> {TRAJECTORY_PATH.name}")
+    return 0
+
+
+def _tolerance(bench: str) -> float:
+    raw = os.environ.get(f"BENCH_{bench.upper()}_TOL")
+    if raw is None:
+        return DEFAULT_TOL
+    try:
+        return float(raw)
+    except ValueError:
+        print(f"trajectory: bad BENCH_{bench.upper()}_TOL={raw!r}, "
+              f"using {DEFAULT_TOL}", file=sys.stderr)
+        return DEFAULT_TOL
+
+
+def check() -> int:
+    doc = _load_trajectory()
+    if not doc["series"]:
+        print("trajectory: no committed baseline — nothing to check "
+              "(run aggregate first)")
+        return 0
+    baseline = doc["series"][-1]
+    base_benches = baseline.get("benches", {})
+    current = _load_benches()
+    failures: List[str] = []
+    checked = 0
+    for bench, metrics in GATED_METRICS.items():
+        cur = current.get(bench)
+        base = base_benches.get(bench)
+        if cur is None:
+            print(f"trajectory: {bench}: no fresh BENCH_{bench}.json — "
+                  f"skipped", file=sys.stderr)
+            continue
+        if base is None:
+            continue                    # new bench: gates start next PR
+        tol = _tolerance(bench)
+        for path, direction in metrics:
+            if path not in base:
+                continue                # new metric: gates start next PR
+            if path not in cur:
+                failures.append(
+                    f"{bench}.{path}: present in baseline but missing "
+                    f"from the fresh run")
+                continue
+            b, c = base[path], cur[path]
+            checked += 1
+            if direction == "higher":
+                limit = b * (1.0 - tol)
+                bad = c < limit
+                drift = f">= {limit:.4g} (baseline {b:.4g} -{tol:.0%})"
+            else:
+                limit = b * (1.0 + tol)
+                bad = c > limit
+                drift = f"<= {limit:.4g} (baseline {b:.4g} +{tol:.0%})"
+            if bad:
+                failures.append(
+                    f"{bench}.{path}: {c:.4g} regressed past {drift}")
+    if failures:
+        print("trajectory: GATED METRIC REGRESSION")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"trajectory: {checked} gated metrics within tolerance of "
+          f"baseline label={baseline.get('label')}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--check", action="store_true",
+                        help="gate fresh BENCH_*.json files against the "
+                             "committed baseline instead of aggregating")
+    parser.add_argument("--label", default=None,
+                        help="snapshot label (default: git rev-list "
+                             "--count HEAD)")
+    args = parser.parse_args(argv)
+    if args.check:
+        return check()
+    return aggregate(args.label)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,4 +23,5 @@ from .provider import (BaseProvider, LocalJaxProvider, MockProvider,
 from .resources import (Catalog, ModelResource, PromptResource,
                         reset_global_catalog)
 from .scheduler import (DispatchJob, RequestScheduler, SchedulerStats,
-                        SpeculativeMaskJoin, execute_serial, split_batch)
+                        SpecTask, SpeculativeJoin, SpeculativeMaskJoin,
+                        execute_serial, split_batch)

@@ -182,13 +182,21 @@ class MockProvider(BaseProvider):
         return out
 
     def embed(self, model, texts):
+        t0 = time.monotonic()
         dim = model.embedding_dim or 64
         out = np.zeros((len(texts), dim), np.float32)
         for i, t in enumerate(texts):
             rng = np.random.default_rng(self._h(t) % (2 ** 32))
             v = rng.standard_normal(dim)
             out[i] = v / np.linalg.norm(v)
-        self.stats.add(calls=1)
+        # same simulated service latency regime as complete(): embeds
+        # are provider round-trips too (retrieval overlap benchmarks
+        # depend on the embed wave costing real wall-clock)
+        sim = self.latency_per_call_s + self.latency_per_token_s * sum(
+            estimate_tokens(t) for t in texts)
+        if sim:
+            time.sleep(min(sim, 1.0))
+        self.stats.add(calls=1, latency_s=time.monotonic() - t0)
         return out
 
 

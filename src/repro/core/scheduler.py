@@ -42,13 +42,18 @@ Pieces:
     a mergeable partner is still plausible.  Per-tuple results are
     independent of batch composition, so merged execution is
     bit-identical to unpacked.
-  * ``SpeculativeMaskJoin`` — the mask-join dispatch group behind the
-    optimizer's speculative filter chains: fans every ``llm_filter``
-    chain member out over the chain's input stream concurrently and
-    ANDs the boolean masks, collapsing k round-trips into ~one; the
-    extra requests are bounded by recorded selectivity (the optimizer's
-    wasted-request budget) and identical keys still coalesce through
-    the single-flight registry.
+  * ``SpeculativeJoin`` — the bounded fan-out/join group behind every
+    speculative plan rewrite (filter chains, map-past-filter,
+    retrieval-aware rerank): heterogeneous speculative tasks (mask
+    thunks, row completions, rerank warmups) run concurrently on a
+    small set of dedicated runner threads, capped in count and in
+    total in-flight rows so deep chains cannot oversubscribe past the
+    scheduler's worker pool; a task that has not started yet can be
+    **cancelled** the moment an upstream mask proves its rows dead,
+    and never reaches the provider.  ``SpeculativeMaskJoin`` survives
+    as the mask-specific facade.  The extra requests are bounded by
+    recorded selectivity (the optimizer's wasted-request budget) and
+    identical keys still coalesce through the single-flight registry.
   * adaptive overflow — ``ContextOverflowError`` splits the batch 10%
     (the paper §2.3 protocol) and requeues both halves on the pool; a
     single tuple that still overflows resolves to NULL.  The same split
@@ -256,6 +261,11 @@ class SchedulerStats:
     packed_batches: int = 0     # tail batches folded into merged requests
     repacked_tails: int = 0     # overflow-split remainders re-queued
     #                             into the packing queue
+    spec_dispatched: int = 0    # speculative tasks that started running
+    spec_cancelled: int = 0     # speculative tasks dropped before dispatch
+    #                             (their rows were proven dead upstream)
+    spec_wasted_rows: int = 0   # rows speculated on that the serial plan
+    #                             would never have evaluated
 
     _lock: threading.Lock = field(default_factory=threading.Lock,
                                   repr=False, compare=False)
@@ -907,59 +917,180 @@ class RequestScheduler:
 
 
 # ---------------------------------------------------------------------------
-# speculative mask-join dispatch group
+# speculative fan-out/join dispatch group
 # ---------------------------------------------------------------------------
-class SpeculativeMaskJoin:
-    """Fan out the members of an ``llm_filter`` chain over the chain's
-    INPUT tuple stream and reconcile their boolean masks with AND.
+# default cap on rows concurrently being speculated on across one join
+# (each task declares how many rows it covers; tasks park until budget
+# frees up, except when nothing is in flight — progress is guaranteed)
+SPEC_INFLIGHT_ROWS_CAP = 4096
 
-    Serial chain execution evaluates filter k+1 only on filter k's
-    survivors, so a k-filter chain pays k provider round-trips
-    back-to-back.  Speculation evaluates every member over the full
-    input concurrently and ANDs the masks — the surviving tuple stream
-    is identical (per-tuple verdicts are independent of batch
-    composition and of which tuples accompany them), but the chain's
-    critical path collapses to one round-trip, at the cost of requests
-    over tuples an earlier filter would have eliminated (the wasted-
-    request budget the optimizer bounds via recorded selectivity).
 
-    Members run on DEDICATED threads, not the scheduler's worker pool:
-    each member blocks in ``DispatchJob.result()`` while its batches
-    execute on the pool, and parking that wait on a pool thread could
-    deadlock a small pool.  Identical cache keys issued by different
-    members still coalesce through the scheduler's single-flight
-    registry, and every member's batches respect the per-model
-    concurrency gates.
+@dataclass
+class SpecTask:
+    """One unit of speculative work for a :class:`SpeculativeJoin`.
 
-    A member that fails with a non-overflow error fails the whole
-    chain (overflow handling stays inside the dispatch engine: an
-    overflow-NULLed tuple decodes to ``False``, exactly as on the
-    serial path)."""
+    ``rows`` is the number of input rows the thunk covers (drives the
+    in-flight row cap and waste accounting); ``mandatory`` marks work
+    the serial plan needs regardless (never cancelled, never counted
+    as speculative dispatch)."""
+    thunk: Callable[[], object]
+    rows: int = 0
+    label: str = ""
+    mandatory: bool = False
 
-    @staticmethod
-    def run(thunks: Sequence[Callable[[], List[bool]]]
-            ) -> tuple[List[List[bool]], List[bool]]:
-        """Run every member thunk concurrently; returns ``(member_masks,
-        combined)`` where ``combined[i] = AND(member[i] for members)``."""
-        masks: List[Optional[List[bool]]] = [None] * len(thunks)
+
+class SpeculativeJoin:
+    """Bounded fan-out/join for heterogeneous speculative tasks: filter
+    masks, row completions, rerank warmups.
+
+    Serial execution of a dependent edge pays the upstream round-trip
+    before the downstream one; speculation runs both concurrently over
+    the upstream INPUT and reconciles afterwards — outputs stay
+    bit-identical (per-tuple results are independent of batch
+    composition), at the cost of requests over rows the upstream stage
+    would have eliminated (the wasted-request budget the optimizer
+    bounds via recorded selectivity).
+
+    Tasks run on a BOUNDED set of dedicated runner threads, not the
+    scheduler's worker pool: each task blocks in
+    ``DispatchJob.result()`` while its batches execute on the pool,
+    and parking that wait on a pool thread could deadlock a small
+    pool.  The runner count is capped relative to the scheduler's
+    ``max_workers`` (and the total speculative in-flight rows by
+    ``max_inflight_rows``), so a deep chain fans out a few members at
+    a time instead of spawning one thread per member.  Batch dispatch
+    itself still rides ``RequestScheduler.submit_map``: identical
+    cache keys coalesce through the single-flight registry, every
+    batch respects the per-model concurrency gates, and part-filled
+    tails ride the co-packing queue.
+
+    Cancellation: ``cancel(i)`` drops task *i* if it has not started —
+    the thunk never runs and no request reaches the provider (counted
+    in ``SchedulerStats.spec_cancelled``).  Thunks may cancel sibling
+    tasks (an upstream mask resolving proves speculative rows dead).
+    A task that fails with a non-overflow error fails the whole join
+    and cancels everything not yet started (overflow handling stays
+    inside the dispatch engine: an overflow-NULLed tuple resolves the
+    same way it would serially)."""
+
+    def __init__(self, scheduler: Optional["RequestScheduler"] = None,
+                 max_runners: Optional[int] = None,
+                 max_inflight_rows: Optional[int] = None):
+        workers = scheduler.max_workers if scheduler is not None else 16
+        self.max_runners = max_runners or max(2, min(8, workers // 2))
+        self.max_inflight_rows = max_inflight_rows or SPEC_INFLIGHT_ROWS_CAP
+        self.stats = scheduler.stats if scheduler is not None else None
+        self._cond = threading.Condition()
+        self._cancelled: set = set()
+        self._started: set = set()
+        self._inflight_rows = 0
+        self.cancelled: List[int] = []      # indices dropped, in order
+
+    # ---- cancellation ------------------------------------------------------
+    def cancel(self, index: int) -> bool:
+        """Drop task ``index`` if it has not started; returns True when
+        the cancellation took effect (the thunk will never run)."""
+        with self._cond:
+            if index in self._started or index in self._cancelled:
+                return False
+            self._cancelled.add(index)
+            return True
+
+    def note_wasted(self, rows: int):
+        """Record rows speculated on that the serial plan would never
+        have evaluated (the caller knows after reconciling masks)."""
+        if self.stats is not None and rows > 0:
+            self.stats.add(spec_wasted_rows=rows)
+
+    # ---- execution ---------------------------------------------------------
+    def _admit(self, task: SpecTask, index: int) -> bool:
+        """Claim the right to run ``index``; blocks for row budget.
+        Returns False when the task was cancelled before starting."""
+        with self._cond:
+            while True:
+                if index in self._cancelled and not task.mandatory:
+                    return False
+                if (self._inflight_rows == 0
+                        or self._inflight_rows + task.rows
+                        <= self.max_inflight_rows):
+                    self._started.add(index)
+                    self._inflight_rows += task.rows
+                    return True
+                self._cond.wait(0.05)
+
+    def _retire(self, task: SpecTask):
+        with self._cond:
+            self._inflight_rows -= task.rows
+            self._cond.notify_all()
+
+    def run(self, tasks: Sequence[SpecTask]) -> list:
+        """Run the tasks concurrently on bounded runner threads; returns
+        results in task order (``None`` for cancelled tasks — their
+        indices land in ``self.cancelled``)."""
+        tasks = list(tasks)
+        results: List = [None] * len(tasks)
         errors: List[BaseException] = []
+        order = list(range(len(tasks)))
+        next_lock = threading.Lock()
 
-        def worker(k: int, thunk):
-            try:
-                masks[k] = list(thunk())
-            # re-raised on the caller  # flocklint: ignore[FLKL105]
-            except BaseException as exc:
-                errors.append(exc)
+        def worker():
+            while True:
+                with next_lock:
+                    if not order or errors:
+                        return
+                    k = order.pop(0)
+                task = tasks[k]
+                if not self._admit(task, k):
+                    if self.stats is not None:
+                        self.stats.add(spec_cancelled=1)
+                    with next_lock:
+                        self.cancelled.append(k)
+                    continue
+                if self.stats is not None and not task.mandatory:
+                    self.stats.add(spec_dispatched=1)
+                try:
+                    results[k] = task.thunk()
+                # re-raised on the caller  # flocklint: ignore[FLKL105]
+                except BaseException as exc:
+                    errors.append(exc)
+                    with self._cond:     # fail fast: drop unstarted work
+                        self._cancelled.update(
+                            i for i in range(len(tasks))
+                            if i not in self._started)
+                finally:
+                    self._retire(task)
 
-        threads = [threading.Thread(target=worker, args=(k, th),
-                                    name=f"flockjax-spec-{k}")
-                   for k, th in enumerate(thunks)]
+        n_threads = min(len(tasks), self.max_runners)
+        threads = [threading.Thread(target=worker,
+                                    name=f"flockjax-spec-{i}")
+                   for i in range(n_threads)]
         for th in threads:
             th.start()
         for th in threads:
             th.join()
         if errors:
             raise errors[0]
+        self.cancelled.sort()
+        return results
+
+
+class SpeculativeMaskJoin:
+    """Mask-specific facade over :class:`SpeculativeJoin` for
+    ``llm_filter`` chains: fan every member out over the chain's INPUT
+    tuple stream and reconcile the boolean masks with AND.  The
+    surviving tuple stream is identical to serial chain execution
+    (per-tuple verdicts are independent of batch composition), but the
+    chain's critical path collapses toward one round-trip."""
+
+    @staticmethod
+    def run(thunks: Sequence[Callable[[], List[bool]]],
+            scheduler: Optional["RequestScheduler"] = None,
+            rows: int = 0) -> tuple[List[List[bool]], List[bool]]:
+        """Run every member thunk concurrently; returns ``(member_masks,
+        combined)`` where ``combined[i] = AND(member[i] for members)``."""
+        join = SpeculativeJoin(scheduler)
+        masks = join.run([SpecTask(th, rows=rows, label=f"member-{k}")
+                          for k, th in enumerate(thunks)])
         lengths = {len(m) for m in masks}
         if len(lengths) > 1:
             raise ValueError(

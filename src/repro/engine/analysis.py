@@ -16,8 +16,9 @@ requests have shipped.  This module closes that gap with three layers:
    ``corpus[content]``).  Inference understands the full operator
    vocabulary: ``Table.lateral`` expansion with the ``_doc`` collision
    suffix exactly as ``retrieval_ops.make_retrieval_fn`` computes it,
-   fused ``llm_fused`` multi-outputs, speculative chains, and grouped
-   ``llm_rerank``.
+   fused ``llm_fused`` multi-outputs, speculative chains, the
+   map-past-filter (``llm_spec_map``) and retrieval-aware rerank
+   (``spec_rerank``) speculation nodes, and grouped ``llm_rerank``.
 
 2. **Pre-flight diagnostics** — ``analyze_plan(ctx, source, nodes)``
    resolves MODEL/PROMPT references against the context's
@@ -68,7 +69,8 @@ from .table import Table
 
 # ops whose executors feed tuples to a provider-backed LLM call
 LLM_OPS = ("llm_filter", "llm_complete", "llm_complete_json",
-           "llm_embedding", "llm_rerank", "llm_fused", "llm_spec_chain")
+           "llm_embedding", "llm_rerank", "llm_fused", "llm_spec_chain",
+           "llm_spec_map", "spec_rerank")
 # retrieval operators (mirrors retrieval_ops.RETRIEVAL_OPS without the
 # import: analysis must stay importable from the optimizer without
 # cycles)
@@ -357,6 +359,16 @@ def _add_out(schema: Schema, name: str, dtype: str, idx: int, op: str,
     return schema.add(Column(name, dtype, f"node[{idx}]:{op}"))
 
 
+class _NodeShim:
+    """Minimal stand-in for a ``PlanNode`` (op + info) so analysis can
+    recurse into the retrieval node a ``spec_rerank`` wraps without
+    importing ``engine.pipeline`` (which imports this module)."""
+    __slots__ = ("op", "info")
+
+    def __init__(self, op: str, info: dict):
+        self.op, self.info = op, info
+
+
 def _infer_retrieval(node, schema: Schema, idx: int,
                      diags: List[Diagnostic]) -> Schema:
     """Retrieval expansion: parent columns replicate, corpus columns
@@ -479,6 +491,37 @@ def _analyze_node(ctx, node, schema: Schema, idx: int,
                           list(member.get("cols", ())), schema, idx, op,
                           diags)
         return schema
+
+    if op == "llm_spec_map":
+        # filter members see the node's INPUT schema (the map runs
+        # speculatively over the same rows)
+        for member in info.get("member_specs", ()):
+            _check_cols(member.get("cols", ()), schema, idx, op, diags)
+            _check_model(ctx, member.get("model"), idx, op, diags)
+            _check_prompt(ctx, member.get("prompt"),
+                          list(member.get("cols", ())), schema, idx, op,
+                          diags)
+        _check_cols(info.get("cols", ()), schema, idx, op, diags)
+        _check_model(ctx, info.get("model"), idx, op, diags)
+        _check_prompt(ctx, info.get("prompt"),
+                      list(info.get("cols", ())), schema, idx, op, diags)
+        dtype = _OUT_DTYPE.get(info.get("map_op", "llm_complete"), "str")
+        return _add_out(schema, info["out"], dtype, idx, op, diags)
+
+    if op == "spec_rerank":
+        # the wrapped retrieval node expands the schema exactly as the
+        # standalone node would; the rerank spec then reads the
+        # EXPANDED columns
+        retr = _NodeShim(info["retr_op"], info["_retr"])
+        out = _analyze_node(ctx, retr, schema, idx, diags)
+        rr = info.get("_rerank", {})
+        _check_cols(rr.get("cols", ()), out, idx, op, diags)
+        _check_model(ctx, rr.get("model"), idx, op, diags)
+        _check_prompt(ctx, rr.get("prompt"), list(rr.get("cols", ())),
+                      out, idx, op, diags)
+        if rr.get("by") is not None:
+            _check_cols([rr["by"]], out, idx, op, diags, "rerank by")
+        return out
 
     if op in RETRIEVAL_OPS:
         qcol = info.get("query_col")
@@ -656,7 +699,7 @@ def _plan_filter_multiset(ctx, nodes) -> Dict[str, int]:
                                node.info.get("prompts", ())):
                 if kind == "filter":
                     bump(p)
-        elif node.op == "llm_spec_chain":
+        elif node.op in ("llm_spec_chain", "llm_spec_map"):
             for member in node.info.get("member_specs", ()):
                 bump(member.get("prompt"))
     return counts
@@ -679,11 +722,26 @@ def _find_node(nodes, key: dict) -> Optional[int]:
                     or (key.get("prompt") is not None
                         and key["prompt"] in info.get("prompts", ())):
                 return i
-        if node.op == "llm_spec_chain" and key["op"] == "llm_filter":
+        if (node.op in ("llm_spec_chain", "llm_spec_map")
+                and key["op"] == "llm_filter"):
             for member in info.get("member_specs", ()):
                 if member.get("prompt") == key.get("prompt"):
                     return i
+        if node.op == "spec_rerank" and key["op"] in RETRIEVAL_OPS:
+            ri = info.get("_retr", {})
+            if (info.get("retr_op") == key["op"]
+                    and ri.get("out") == key.get("out")
+                    and ri.get("corpus_fp") == key.get("corpus_fp")):
+                return i
     return None
+
+
+def _retrieval_info(node) -> dict:
+    """The retrieval-shaped info dict of a node: the node's own for a
+    plain retrieval op, the wrapped ``_retr`` for ``spec_rerank``."""
+    if node.op == "spec_rerank":
+        return node.info.get("_retr", {})
+    return node.info
 
 
 def _discharge(ctx, source: Table, naive_nodes, opt_nodes,
@@ -753,24 +811,31 @@ def _discharge(ctx, source: Table, naive_nodes, opt_nodes,
             return (f"filter predicate multiset changed: "
                     f"{sorted(naive_f.items())} -> "
                     f"{sorted(opt_f.items())}")
-        if p.get("spec_chain"):
+        if p.get("spec_chain") or p.get("spec_map"):
             want = sorted(_prompt_fingerprint(s) for s in p["prompts"])
+            # a chain chosen for chain-speculation may later be absorbed
+            # into an llm_spec_map by the map-past-filter rule — either
+            # node form discharges the chain's claim
+            ops = (("llm_spec_chain", "llm_spec_map")
+                   if p.get("spec_chain") else ("llm_spec_map",))
             for node in opt_nodes:
-                if node.op != "llm_spec_chain":
+                if node.op not in ops:
                     continue
                 got = sorted(
                     _prompt_fingerprint(m.get("prompt"))
                     for m in node.info.get("member_specs", ()))
                 if got == want:
                     return None
-            return "no llm_spec_chain node carries the chain members"
+            if p.get("spec_chain"):
+                return "no llm_spec_chain node carries the chain members"
+            return "no llm_spec_map node carries the filter members"
         return None
 
     if ob.kind == "selection_invariance":
         idx = _find_node(opt_nodes, p["key"])
         if idx is None:
             return "pruned retrieval node vanished from the plan"
-        info = opt_nodes[idx].info
+        info = _retrieval_info(opt_nodes[idx])
         if not info.get("prune_corpus"):
             return "prune_corpus flag missing on the rewritten node"
         if info.get("corpus_filter") is None:
@@ -782,7 +847,18 @@ def _discharge(ctx, source: Table, naive_nodes, opt_nodes,
         idx = _find_node(opt_nodes, p["key"])
         if idx is None:
             return "retrieval node vanished from the plan"
-        info = opt_nodes[idx].info
+        info = _retrieval_info(opt_nodes[idx])
+        if p.get("spec_rerank"):
+            node = opt_nodes[idx]
+            if node.op != "spec_rerank":
+                return "speculative rerank node vanished from the plan"
+            if node.info.get("k") != p["k"]:
+                return (f"spec_rerank k drifted: claimed {p['k']}, "
+                        f"plan has {node.info.get('k')}")
+            # reconciliation is structural: the authoritative retrieval
+            # runs unchanged inside the node, so the final top-k is the
+            # serial one by construction — only identity + k can drift
+            return None
         if "candidate_k" in p:
             ck = info.get("candidate_k")
             if ck is None or ck < max(p["k"], 1):

@@ -36,22 +36,43 @@ that rewrite layer for ``Pipeline`` plans.  Three rules run in sequence:
    ``provider.estimate_tokens`` and the per-prompt pass rates recorded in
    ``SemanticContext.selectivity_stats``.
 
-4. **Speculative filter-chain dispatch** (opt-in via the context/
-   ``collect()`` ``speculate`` knob) — a cost-ordered ``llm_filter``
-   chain normally pays one provider round-trip PER member, because
-   member k+1 waits for member k's survivors.  When speculation is on,
-   the optimizer may replace the chain with one ``llm_spec_chain`` node
-   that fans every member out over the chain's *input* stream
-   concurrently (``core.scheduler.SpeculativeMaskJoin``) and ANDs the
-   masks — collapsing k round-trips into ~one at the cost of requests
-   over tuples an earlier filter would have eliminated.  The decision
-   is per chain: expected wasted requests are predicted from recorded
-   selectivity and must stay within ``speculate_waste_cap`` x the
-   serial request count, and the speculative plan must win on the
-   **calibrated** wall-clock estimate (observed per-request latency
-   percentiles and retry rates from the ``CalibrationStore``; plain
-   ``waves`` comparison when uncalibrated).  ``speculate="always"``
-   forces eligible chains regardless (equivalence tests, benchmarks).
+4. **Speculative pipelining** (opt-in via the context/``collect()``
+   ``speculate`` knob) — dependent plan edges overlap instead of
+   queueing, in three shapes:
+
+   * **filter chains** — a cost-ordered ``llm_filter`` chain normally
+     pays one provider round-trip PER member, because member k+1 waits
+     for member k's survivors.  The optimizer may replace the chain
+     with one ``llm_spec_chain`` node that fans a chosen *prefix* of
+     members out over the chain's input stream concurrently
+     (``core.scheduler.SpeculativeJoin``) and ANDs the masks, keeping
+     the expensive tail serial over the prefix's survivors — the split
+     point is the one minimizing the wall estimate under the waste
+     cap (``split == len(chain)`` reproduces PR 3's all-or-nothing
+     fan-out).
+   * **map past filter** — an ``llm_complete``/``llm_complete_json``
+     node downstream of an ``llm_filter`` (or spec chain) dispatches
+     completions for the filter's INPUT rows concurrently with the
+     mask (``llm_spec_map``).  Chunks whose rows the resolved mask
+     proves dead are cancelled before dispatch; completed values for
+     masked-out rows are discarded from the output but still land in
+     the prediction cache.
+   * **retrieval-aware rerank** — ``llm_rerank`` downstream of
+     ``hybrid_topk`` starts reranking the BM25-predicted per-query
+     candidate lists while the dense retriever and fusion finish
+     (``spec_rerank``), warming the rerank window cache; the
+     authoritative pass over the final top-k reconciles via cache
+     hits, so outputs are bit-identical by construction.
+
+   Every decision is per edge: expected wasted requests are predicted
+   from recorded selectivity and must stay within
+   ``speculate_waste_cap`` x the serial request count (widened 1.25x
+   under the ``latency`` objective, narrowed 0.8x under ``cost``), and
+   the speculative plan must win on the **calibrated** wall-clock
+   estimate (observed per-request latency percentiles and retry rates
+   from the ``CalibrationStore``; plain ``waves`` comparison when
+   uncalibrated).  ``speculate="always"`` forces eligible edges
+   regardless (equivalence tests, benchmarks).
 
 The cost model is *calibrated* when execution statistics exist:
 per-request latency percentiles turn ``waves`` into an ``est_wall``
@@ -68,6 +89,7 @@ rewritten plan.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -176,9 +198,12 @@ class PlanCost:
 
 @dataclass
 class SpeculationDecision:
-    """Record of one per-chain speculative-dispatch decision: the serial
+    """Record of one per-edge speculative-dispatch decision: the serial
     vs speculative waves/wall estimates, the expected wasted-request
-    budget, and whether the planner chose speculation."""
+    budget, and whether the planner chose speculation.  ``kind`` names
+    the speculation shape (``chain`` / ``map`` / ``rerank``); for
+    chains ``split`` is the number of prefix members speculated (0 or
+    ``len(members)`` = the whole chain)."""
     members: List[str]                  # member prompt identities
     rows_in: int = 0
     serial_requests: int = 0
@@ -190,13 +215,24 @@ class SpeculationDecision:
     spec_wall_s: float = 0.0
     chosen: bool = False
     reason: str = ""
+    kind: str = "chain"                 # chain | map | rerank
+    split: int = 0                      # chain: speculated prefix length
 
     def __str__(self):
+        if self.kind == "map":
+            head = f"map past filter over {self.rows_in} rows"
+        elif self.kind == "rerank":
+            head = (f"rerank over retrieval "
+                    f"({self.rows_in} candidate rows)")
+        else:
+            head = f"chain of {len(self.members)} over {self.rows_in} rows"
+            if 0 < self.split < len(self.members):
+                head += f" (spec prefix {self.split})"
         walls = ""
         if self.serial_wall_s or self.spec_wall_s:
             walls = (f" serial_wall={self.serial_wall_s:.3f}s "
                      f"spec_wall={self.spec_wall_s:.3f}s")
-        return (f"chain of {len(self.members)} over {self.rows_in} rows: "
+        return (f"{head}: "
                 f"serial_waves={self.serial_waves} "
                 f"spec_waves={self.spec_waves}{walls} "
                 f"wasted<={self.wasted_requests} "
@@ -305,10 +341,11 @@ def _per_model_waves(entries) -> Tuple[int, Optional[float]]:
 
 
 def _filter_estimate(ctx: SemanticContext, member: dict, n: int,
-                     source: Table) -> Tuple[int, int]:
-    """(requests, tokens) estimate for one ``llm_filter`` evaluation —
-    ``member`` carries ``model``/``prompt``/``cols`` specs — over ``n``
-    tuples, with the calibrated request correction applied."""
+                     source: Table, kind: str = "filter") -> Tuple[int, int]:
+    """(requests, tokens) estimate for one per-row semantic evaluation —
+    ``member`` carries ``model``/``prompt``/``cols`` specs, ``kind`` the
+    metaprompt flavour (``filter``/``complete``/``complete_json``) —
+    over ``n`` tuples, with the calibrated request correction applied."""
     if n <= 0:
         return 0, 0
     model = ctx.resolve_model(member["model"])
@@ -316,7 +353,7 @@ def _filter_estimate(ctx: SemanticContext, member: dict, n: int,
                                   ctx.serialization)
     prompt_text, _ = ctx.resolve_prompt(member["prompt"])
     prefix_tokens = estimate_tokens(
-        build_prefix("filter", prompt_text, ctx.serialization))
+        build_prefix(kind, prompt_text, ctx.serialization))
     plan = plan_batches([per_tuple] * n, prefix_tokens,
                         model.context_window, model.max_output_tokens,
                         ctx.max_batch if ctx.enable_batching else 1,
@@ -526,13 +563,58 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
                                    else seen_corpus)
 
     if op == "llm_spec_chain":
-        # speculative mask-join: every member runs over the full chain
-        # input; waves are per-model (members of different models fan
-        # out on independent gates, same-model members share one)
+        # speculative mask-join: the speculated prefix runs over the
+        # full chain input with per-model waves (members of different
+        # models fan out on independent gates, same-model members share
+        # one); serial tail members queue behind it over the prefix's
+        # survivors
         n = int(round(rows))
         if n <= 0:
             return 0.0, cost
+        members = info["member_specs"]
+        split = info.get("split") or len(members)
         per_model: dict = {}        # ref -> [requests, limit, latency]
+        tail_waves, tail_wall = 0, 0.0
+        tail_calibrated = True
+        for k, member in enumerate(members):
+            model = ctx.resolve_model(member["model"])
+            limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+            lat = ctx.calibrated_latency(model.ref)
+            if k < split:
+                req, tok = _filter_estimate(ctx, member, n, source)
+                cost.rows_into_llm += n
+                entry = per_model.setdefault(model.ref, [0, limit, lat])
+                entry[0] += req
+                entry[1] = min(entry[1], limit)
+            else:
+                m = int(round(rows))
+                req, tok = _filter_estimate(ctx, member, m, source)
+                cost.rows_into_llm += m
+                w = -(-req // limit) if req else 0
+                tail_waves += w
+                if lat is None:
+                    tail_calibrated = False
+                else:
+                    tail_wall += w * lat
+            cost.requests += req
+            cost.tokens += tok
+            _, pid = ctx.resolve_prompt(member["prompt"])
+            rows = rows * ctx.expected_selectivity(pid,
+                                                   DEFAULT_SELECTIVITY)
+        waves, wall = _per_model_waves(per_model.values())
+        cost.waves = waves + tail_waves
+        cost.wall_s = (wall + tail_wall
+                       if wall is not None and tail_calibrated else 0.0)
+        return rows, cost
+
+    if op == "llm_spec_map":
+        # map-past-filter: filter members and the downstream map all
+        # run over the node's full input concurrently; the critical
+        # path is the slowest model's wave count
+        n = int(round(rows))
+        if n <= 0:
+            return 0.0, cost
+        per_model = {}
         for member in info["member_specs"]:
             model = ctx.resolve_model(member["model"])
             limit = max(1, getattr(model, "max_concurrency", 1) or 1)
@@ -547,9 +629,47 @@ def estimate_node_cost(ctx: SemanticContext, node, rows_in: float,
             _, pid = ctx.resolve_prompt(member["prompt"])
             rows = rows * ctx.expected_selectivity(pid,
                                                    DEFAULT_SELECTIVITY)
+        map_spec = {"model": info["model"], "prompt": info["prompt"],
+                    "cols": info.get("cols", ())}
+        mkind = ("complete_json" if info.get("map_op") ==
+                 "llm_complete_json" else "complete")
+        req, tok = _filter_estimate(ctx, map_spec, n, source, kind=mkind)
+        model = ctx.resolve_model(info["model"])
+        limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+        cost.requests += req
+        cost.tokens += tok
+        cost.rows_into_llm += n
+        entry = per_model.setdefault(
+            model.ref, [0, limit, ctx.calibrated_latency(model.ref)])
+        entry[0] += req
+        entry[1] = min(entry[1], limit)
         cost.waves, wall = _per_model_waves(per_model.values())
         cost.wall_s = wall or 0.0
         return rows, cost
+
+    if op == "spec_rerank":
+        # retrieval + rerank warmup overlap: the retrieval's embeds and
+        # the BM25-predicted rerank windows run concurrently; the
+        # authoritative pass reconciles through the window cache
+        shim = node.__class__(info["retr_op"], info["_retr"])
+        rows_out, cost = _retrieval_estimate(
+            ctx, shim, rows, source,
+            set() if seen_corpus is None else seen_corpus)
+        n = int(round(rows_out))
+        if n > 0:
+            window, stride = 10, 5
+            windows = 1 if n <= window else 1 + -(-(n - window) // stride)
+            rr = info["_rerank"]
+            per_tuple = _avg_tuple_tokens(source, rr.get("cols", ()),
+                                          ctx.serialization)
+            prompt_text, _ = ctx.resolve_prompt(rr["prompt"])
+            prefix_tokens = estimate_tokens(
+                build_prefix("rerank", prompt_text, ctx.serialization))
+            cost.requests += windows
+            cost.tokens += windows * (prefix_tokens + window * per_tuple)
+            cost.rows_into_llm += n
+            cost.waves = max(cost.waves, windows)
+        return rows_out, cost
 
     if op not in SEMANTIC_OPS:
         return rows, cost
@@ -1114,19 +1234,44 @@ def _reorder_filters(ctx: SemanticContext, nodes: List, source: Table,
 
 
 # ---------------------------------------------------------------------------
-# rule 4: speculative filter-chain dispatch (opt-in)
+# rule 4: speculative pipelining (opt-in)
 # ---------------------------------------------------------------------------
-def _make_spec_chain_node(ctx: SemanticContext, chain: List):
-    """Build one ``llm_spec_chain`` node executing the chain members as
-    a concurrent mask-join over the chain's input tuple stream.
+# objective-aware widening of the waste budget: a latency-first session
+# tolerates extra speculative requests (they buy wall-clock), a
+# cost-first one narrows the budget below the configured cap
+SPEC_CAP_OBJECTIVE_MULT = {"latency": 1.25, "cost": 0.8}
 
-    Each member runs the full ``llm_filter`` staged path (dedup, cache,
-    batch-plan, scheduler dispatch) on its own thread, so identical
-    cache keys across members coalesce through the scheduler's
-    single-flight registry and every member honours its model's
-    concurrency gate.  Masks are ANDed; a tuple NULLed by overflow
-    decodes to False — exactly the serial path's disposition — so the
-    surviving stream is bit-identical to serial chain execution.
+# prior probability that a BM25-predicted per-query candidate list does
+# NOT match the final fused top-k (no per-corpus calibration yet): the
+# expected fraction of rerank warmup requests charged as waste
+SPEC_RERANK_MISMATCH_PRIOR = 0.5
+
+
+def _waste_cap(ctx: SemanticContext, serial_requests: int,
+               objective: str) -> float:
+    """Wasted-request budget for one speculation decision."""
+    mult = SPEC_CAP_OBJECTIVE_MULT.get(objective, 1.0)
+    return ctx.speculate_waste_cap * mult * max(serial_requests, 1)
+
+
+def _make_spec_chain_node(ctx: SemanticContext, chain: List,
+                          split: Optional[int] = None):
+    """Build one ``llm_spec_chain`` node executing the first ``split``
+    chain members as a concurrent mask-join over the chain's input
+    tuple stream, then the remaining members serially over the prefix's
+    survivors (``split`` omitted or == ``len(chain)``: the whole chain
+    fans out, PR 3's behaviour).
+
+    Each speculated member runs the full ``llm_filter`` staged path
+    (dedup, cache, batch-plan, scheduler dispatch) on one of the join's
+    bounded runner threads, so identical cache keys across members
+    coalesce through the scheduler's single-flight registry and every
+    member honours its model's concurrency gate.  Masks are ANDed; a
+    tuple NULLed by overflow decodes to False — exactly the serial
+    path's disposition — so the surviving stream is bit-identical to
+    serial chain execution.  Tail members' masks are expanded back to
+    the chain-input frame (False at already-dead positions) so
+    ``member_masks`` stays one full-length mask per member.
 
     Note on statistics: speculative members observe *marginal* pass
     rates (over the chain input) where serial execution records
@@ -1138,6 +1283,9 @@ def _make_spec_chain_node(ctx: SemanticContext, chain: List):
     members = [{"model": g.info["model"], "prompt": g.info["prompt"],
                 "cols": list(g.info["cols"])} for g in chain]
     prompt_ids = [ctx.resolve_prompt(g.info["prompt"])[1] for g in chain]
+    k = len(members)
+    if split is None or split <= 0 or split > k:
+        split = k
     all_cols: List[str] = []
     for m in members:
         for c in m["cols"]:
@@ -1146,51 +1294,85 @@ def _make_spec_chain_node(ctx: SemanticContext, chain: List):
 
     node = PlanNode("llm_spec_chain", {
         "member_specs": members, "cols": all_cols,
-        "members": prompt_ids, "chain": len(members)})
+        "members": prompt_ids, "chain": k, "split": split})
 
     def fn(t: Table) -> Table:
-        from repro.core.scheduler import SpeculativeMaskJoin
+        from repro.core.scheduler import SpecTask, SpeculativeJoin
 
-        slots: List[Any] = [None] * len(members)
+        slots: List[Any] = [None] * k
+        masks_out: List[Any] = [None] * k
 
-        def make_thunk(k: int, member: dict):
+        def make_thunk(kk: int, member: dict):
             def thunk() -> List[bool]:
                 tuples = [{c: row[c] for c in member["cols"]}
                           for row in t.rows()]
                 mask = F.llm_filter(ctx, member["model"],
                                     member["prompt"], tuples)
-                slots[k] = ctx.last_report_slot()
+                slots[kk] = ctx.last_report_slot()
                 return mask
             return thunk
 
-        masks, combined = SpeculativeMaskJoin.run(
-            [make_thunk(k, m) for k, m in enumerate(members)])
-        node.info["member_masks"] = masks
+        join = SpeculativeJoin(ctx.scheduler)
+        masks = join.run(
+            [SpecTask(make_thunk(kk, m), rows=len(t), label=f"member-{kk}")
+             for kk, m in enumerate(members[:split])])
+        lengths = {len(m) for m in masks}
+        if len(lengths) > 1:
+            raise ValueError(
+                f"speculative members returned masks of differing "
+                f"lengths {sorted(lengths)}")
+        combined = [all(col) for col in zip(*masks)]
+        for kk in range(split):
+            masks_out[kk] = list(masks[kk])
+        cur = t.filter_mask(combined)
+        alive = [i for i, keep in enumerate(combined) if keep]
+        for kk in range(split, k):
+            member = members[kk]
+            tuples = [{c: row[c] for c in member["cols"]}
+                      for row in cur.rows()]
+            mask = F.llm_filter(ctx, member["model"], member["prompt"],
+                                tuples)
+            slots[kk] = ctx.last_report_slot()
+            full = [False] * len(t)
+            for pos, keep in zip(alive, mask):
+                full[pos] = bool(keep)
+            masks_out[kk] = full
+            cur = cur.filter_mask(mask)
+            alive = [pos for pos, keep in zip(alive, mask) if keep]
+        node.info["member_masks"] = masks_out
         node.info["member_report_slots"] = slots
-        return t.filter_mask(combined)
+        return cur
 
     node.fn = fn
     return node
 
 
 def _decide_speculation(ctx: SemanticContext, source: Table, chain: List,
-                        rows_in: float, mode: str
+                        rows_in: float, mode: str,
+                        objective: str = "latency"
                         ) -> Tuple[SpeculationDecision, float]:
-    """Estimate serial vs speculative execution of one filter chain.
+    """Estimate serial vs speculative execution of one filter chain,
+    over every candidate prefix split.
 
     Serial: member k sees the survivors of members < k (cardinalities
     from recorded selectivity) and its waves queue behind k-1 finished
-    round-trips.  Speculative: every member sees the full chain input;
-    same-model members share one concurrency gate, different models fan
-    out independently, so the chain's critical path is the slowest
-    model's wave count — ~1 round-trip when the fan-out fits the
-    concurrency limits.  Expected waste is the speculative request
-    count minus the serial one."""
+    round-trips.  Speculative with split s: the first s members all see
+    the full chain input; same-model members share one concurrency
+    gate, different models fan out independently, so the prefix's
+    critical path is the slowest model's wave count — ~1 round-trip
+    when the fan-out fits the concurrency limits — and the remaining
+    members queue serially over the prefix's survivors (their
+    cardinalities are the serial ones: the ANDed prefix admits exactly
+    the rows serial prefix execution would).  Expected waste is the
+    prefix's request count over the full input minus its serial one;
+    the chosen split minimizes the wall estimate (waves when
+    uncalibrated) among splits within the waste cap."""
     n = int(round(rows_in))
+    k = len(chain)
     decision = SpeculationDecision(
         members=[ctx.resolve_prompt(g.info["prompt"])[1] for g in chain],
         rows_in=n)
-    per_model: dict = {}        # ref -> [spec requests, limit, latency]
+    per_member: List[dict] = []
     calibrated = True
     rows = rows_in
     for g in chain:
@@ -1201,46 +1383,80 @@ def _decide_speculation(ctx: SemanticContext, source: Table, chain: List,
         lat = ctx.calibrated_latency(model.ref)
         if lat is None:
             calibrated = False
-        req_serial, _ = _filter_estimate(ctx, member, int(round(rows)),
-                                         source)
-        decision.serial_requests += req_serial
-        w = -(-req_serial // limit) if req_serial else 0
-        decision.serial_waves += w
-        if lat is not None:
-            decision.serial_wall_s += w * lat
-        if int(round(rows)) == n:       # first member: same estimate
+        m = int(round(rows))
+        req_serial, _ = _filter_estimate(ctx, member, m, source)
+        if m == n:                      # first member: same estimate
             req_spec = req_serial
         else:
             req_spec, _ = _filter_estimate(ctx, member, n, source)
-        decision.spec_requests += req_spec
-        entry = per_model.setdefault(model.ref, [0, limit, lat])
-        entry[0] += req_spec
-        entry[1] = min(entry[1], limit)
+        w = -(-req_serial // limit) if req_serial else 0
+        per_member.append({"ref": model.ref, "limit": limit, "lat": lat,
+                           "req_serial": req_serial, "req_spec": req_spec,
+                           "w_serial": w})
+        decision.serial_requests += req_serial
+        decision.serial_waves += w
+        if lat is not None:
+            decision.serial_wall_s += w * lat
         _, pid = ctx.resolve_prompt(member["prompt"])
         rows = rows * ctx.expected_selectivity(pid, DEFAULT_SELECTIVITY)
-    decision.spec_waves, spec_wall = _per_model_waves(per_model.values())
-    if spec_wall is not None:
-        decision.spec_wall_s = spec_wall
-    else:
-        decision.serial_wall_s = 0.0
-    decision.wasted_requests = max(
-        0, decision.spec_requests - decision.serial_requests)
 
+    def candidate(s: int) -> dict:
+        per_model: dict = {}    # ref -> [spec requests, limit, latency]
+        for pm in per_member[:s]:
+            entry = per_model.setdefault(pm["ref"],
+                                         [0, pm["limit"], pm["lat"]])
+            entry[0] += pm["req_spec"]
+            entry[1] = min(entry[1], pm["limit"])
+        waves, wall = _per_model_waves(per_model.values())
+        for pm in per_member[s:]:
+            waves += pm["w_serial"]
+            if wall is not None:
+                if pm["lat"] is None and pm["req_serial"]:
+                    wall = None
+                elif pm["lat"] is not None:
+                    wall += pm["w_serial"] * pm["lat"]
+        wasted = max(0, sum(pm["req_spec"] - pm["req_serial"]
+                            for pm in per_member[:s]))
+        requests = (sum(pm["req_spec"] for pm in per_member[:s])
+                    + sum(pm["req_serial"] for pm in per_member[s:]))
+        return {"split": s, "waves": waves, "wall": wall,
+                "wasted": wasted, "requests": requests}
+
+    def adopt(c: dict):
+        decision.split = c["split"]
+        decision.spec_requests = c["requests"]
+        decision.spec_waves = c["waves"]
+        decision.wasted_requests = c["wasted"]
+        if c["wall"] is not None:
+            decision.spec_wall_s = c["wall"]
+        else:
+            decision.serial_wall_s = 0.0
+
+    cands = [candidate(s) for s in range(2, k + 1)]
     if mode == "always":
+        adopt(cands[-1])                # force the whole chain
         decision.chosen = True
         decision.reason = "forced by speculate='always'"
         return decision, rows
-    cap = ctx.speculate_waste_cap * max(decision.serial_requests, 1)
-    if decision.wasted_requests > cap:
+    cap = _waste_cap(ctx, decision.serial_requests, objective)
+    feasible = [c for c in cands if c["wasted"] <= cap]
+    if not feasible:
+        adopt(min(cands, key=lambda c: c["wasted"]))
         decision.reason = (f"expected waste {decision.wasted_requests} "
                            f"requests exceeds cap {cap:.0f}")
-    elif calibrated and decision.spec_wall_s and decision.serial_wall_s:
-        decision.chosen = decision.spec_wall_s < decision.serial_wall_s
+    elif calibrated and decision.serial_wall_s:
+        adopt(min(feasible,
+                  key=lambda c: (c["wall"] if c["wall"] is not None
+                                 else float("inf"), c["wasted"])))
+        decision.chosen = bool(
+            decision.spec_wall_s
+            and decision.spec_wall_s < decision.serial_wall_s)
         decision.reason = (
             f"calibrated wall {decision.spec_wall_s:.3f}s "
             f"{'<' if decision.chosen else '>='} "
             f"{decision.serial_wall_s:.3f}s")
     else:
+        adopt(min(feasible, key=lambda c: (c["waves"], c["wasted"])))
         decision.chosen = decision.spec_waves < decision.serial_waves
         decision.reason = (
             f"uncalibrated waves {decision.spec_waves} "
@@ -1250,7 +1466,8 @@ def _decide_speculation(ctx: SemanticContext, source: Table, chain: List,
 
 def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
                       rewrites: List[str],
-                      obligations: List[Obligation], mode: str
+                      obligations: List[Obligation], mode: str,
+                      objective: str = "latency"
                       ) -> Tuple[List, List[SpeculationDecision]]:
     """Replace each eligible ``llm_filter`` chain (length >= 2) with a
     speculative mask-join node when the decision model says it pays."""
@@ -1275,14 +1492,17 @@ def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
             i = j
             continue
         decision, rows = _decide_speculation(ctx, source, chain, rows,
-                                             mode)
+                                             mode, objective)
         decisions.append(decision)
         if decision.chosen:
-            out.append(_make_spec_chain_node(ctx, chain))
+            out.append(_make_spec_chain_node(ctx, chain, decision.split))
+            prefix = ""
+            if 0 < decision.split < len(chain):
+                prefix = f", prefix={decision.split}"
             rule = (f"speculate(chain of {len(chain)}: "
                     f"spec_waves={decision.spec_waves} vs "
                     f"serial_waves={decision.serial_waves}, "
-                    f"wasted<={decision.wasted_requests})")
+                    f"wasted<={decision.wasted_requests}{prefix})")
             rewrites.append(rule)
             # claim: the mask-join ANDs exactly the chain's predicates
             # (surviving stream bit-identical to serial execution)
@@ -1296,6 +1516,376 @@ def _speculate_chains(ctx: SemanticContext, source: Table, nodes: List,
                 f"rejected(speculate chain of {len(chain)}: "
                 f"{decision.reason})")
         i = j
+    return out, decisions
+
+
+# ---------------------------------------------------------------------------
+# rule 4b: map-past-filter speculation
+# ---------------------------------------------------------------------------
+def _filter_members(node) -> List[dict]:
+    """Member specs of an upstream mask producer: one spec for a plain
+    ``llm_filter``, the member list for an ``llm_spec_chain``."""
+    if node.op == "llm_spec_chain":
+        return [dict(m) for m in node.info["member_specs"]]
+    return [{"model": node.info["model"], "prompt": node.info["prompt"],
+             "cols": list(node.info["cols"])}]
+
+
+def _decide_spec_map(ctx: SemanticContext, source: Table, filt, mp,
+                     rows_in: float, mode: str, objective: str
+                     ) -> Tuple[SpeculationDecision, float]:
+    """Estimate serial vs speculative execution of one filter->map edge.
+
+    Serial: the map queues behind the mask and sees only the survivors.
+    Speculative: the map dispatches over the filter's full input
+    concurrently with the mask — the edge's critical path is
+    ``max(filter waves, map waves over the full input)`` — and the
+    expected waste is the map requests over rows the mask kills."""
+    n = int(round(rows_in))
+    rows_out, fcost = estimate_node_cost(ctx, filt, rows_in, source)
+    members = _filter_members(filt)
+    decision = SpeculationDecision(
+        kind="map",
+        members=([ctx.resolve_prompt(m["prompt"])[1] for m in members]
+                 + [ctx.resolve_prompt(mp.info["prompt"])[1]]),
+        rows_in=n)
+    if n <= 0:
+        decision.reason = "no input rows"
+        return decision, rows_out
+    survivors = int(round(rows_out))
+    map_spec = {"model": mp.info["model"], "prompt": mp.info["prompt"],
+                "cols": mp.info.get("cols", ())}
+    mkind = ("complete_json" if mp.op == "llm_complete_json"
+             else "complete")
+    req_surv, _ = _filter_estimate(ctx, map_spec, survivors, source,
+                                   kind=mkind)
+    req_full, _ = _filter_estimate(ctx, map_spec, n, source, kind=mkind)
+    model = ctx.resolve_model(mp.info["model"])
+    limit = max(1, getattr(model, "max_concurrency", 1) or 1)
+    lat = ctx.calibrated_latency(model.ref)
+    w_surv = -(-req_surv // limit) if req_surv else 0
+    w_full = -(-req_full // limit) if req_full else 0
+    decision.serial_requests = fcost.requests + req_surv
+    decision.spec_requests = fcost.requests + req_full
+    decision.serial_waves = fcost.waves + w_surv
+    decision.spec_waves = max(fcost.waves, w_full)
+    decision.wasted_requests = max(0, req_full - req_surv)
+
+    # the filter side's calibrated wall: spec chains self-wall, plain
+    # filters wall via their model's recorded latency
+    if filt.op == "llm_spec_chain":
+        wall_f = fcost.wall_s if fcost.wall_s else None
+    else:
+        lat_f = ctx.calibrated_latency(
+            ctx.resolve_model(filt.info["model"]).ref)
+        wall_f = fcost.waves * lat_f if lat_f is not None else None
+    if wall_f is not None and lat is not None:
+        decision.serial_wall_s = wall_f + w_surv * lat
+        decision.spec_wall_s = max(wall_f, w_full * lat)
+
+    if mode == "always":
+        decision.chosen = True
+        decision.reason = "forced by speculate='always'"
+        return decision, rows_out
+    cap = _waste_cap(ctx, decision.serial_requests, objective)
+    if decision.wasted_requests > cap:
+        decision.reason = (f"expected waste {decision.wasted_requests} "
+                           f"requests exceeds cap {cap:.0f}")
+    elif decision.spec_wall_s and decision.serial_wall_s:
+        decision.chosen = decision.spec_wall_s < decision.serial_wall_s
+        decision.reason = (
+            f"calibrated wall {decision.spec_wall_s:.3f}s "
+            f"{'<' if decision.chosen else '>='} "
+            f"{decision.serial_wall_s:.3f}s")
+    else:
+        decision.chosen = decision.spec_waves < decision.serial_waves
+        decision.reason = (
+            f"uncalibrated waves {decision.spec_waves} "
+            f"{'<' if decision.chosen else '>='} {decision.serial_waves}")
+    return decision, rows_out
+
+
+def _make_spec_map_node(ctx: SemanticContext, filt, mp):
+    """Build one ``llm_spec_map`` node running the upstream mask members
+    and the downstream map concurrently over the edge's input rows.
+
+    The mask members are mandatory tasks (the serial plan needs them);
+    the map dispatches in row chunks so the resolved mask can cancel
+    not-yet-started chunks whose rows are all dead.  Values computed
+    for rows the mask kills are dropped from the output (and counted
+    via ``SchedulerStats.spec_wasted_rows``) but remain in the
+    prediction cache — a later plan over the same rows gets them free.
+    Surviving rows keep their serial values: per-tuple completions are
+    independent of batch composition, so the output is bit-identical
+    to filter-then-map."""
+    from .pipeline import PlanNode      # local import: avoid cycle
+
+    members = _filter_members(filt)
+    prompt_ids = [ctx.resolve_prompt(m["prompt"])[1] for m in members]
+    nm = len(members)
+    node = PlanNode("llm_spec_map", {
+        "member_specs": members, "members": prompt_ids,
+        "model": mp.info["model"], "prompt": mp.info["prompt"],
+        "cols": list(mp.info["cols"]), "out": mp.info["out"],
+        "map_op": mp.op, "chain": nm})
+
+    def fn(t: Table) -> Table:
+        from repro.core.scheduler import SpecTask, SpeculativeJoin
+
+        n = len(t)
+        out_col = node.info["out"]
+        if n == 0:
+            return t.filter_mask([]).with_column(out_col, [])
+        rows_all = list(t.rows())
+        chunk = (ctx.max_batch
+                 if ctx.enable_batching and ctx.max_batch else 32)
+        spans = [(s, min(s + chunk, n)) for s in range(0, n, chunk)]
+        join = SpeculativeJoin(ctx.scheduler)
+        slots: List[Any] = [None] * (nm + 1)
+        masks: List[Any] = [None] * nm
+        lock = threading.Lock()
+        state = {"left": nm}
+
+        def make_member(k: int, member: dict):
+            def thunk() -> List[bool]:
+                tuples = [{c: row[c] for c in member["cols"]}
+                          for row in rows_all]
+                mask = F.llm_filter(ctx, member["model"],
+                                    member["prompt"], tuples)
+                slots[k] = ctx.last_report_slot()
+                masks[k] = mask
+                with lock:
+                    state["left"] -= 1
+                    done = state["left"] == 0
+                if done:
+                    combined = [all(col) for col in zip(*masks)]
+                    state["combined"] = combined
+                    # the mask resolved: speculative chunks whose rows
+                    # are all dead never need to run
+                    for j, (s, e) in enumerate(spans):
+                        if not any(combined[s:e]):
+                            join.cancel(nm + j)
+                return mask
+            return thunk
+
+        map_cols = node.info["cols"]
+        map_fn = (F.llm_complete_json
+                  if node.info["map_op"] == "llm_complete_json"
+                  else F.llm_complete)
+
+        def make_chunk(j: int, s: int, e: int):
+            def thunk() -> list:
+                tuples = [{c: rows_all[i][c] for c in map_cols}
+                          for i in range(s, e)]
+                vals = map_fn(ctx, node.info["model"],
+                              node.info["prompt"], tuples)
+                slots[nm] = ctx.last_report_slot()
+                return vals
+            return thunk
+
+        tasks = ([SpecTask(make_member(k, m), rows=n,
+                           label=f"member-{k}", mandatory=True)
+                  for k, m in enumerate(members)]
+                 + [SpecTask(make_chunk(j, s, e), rows=e - s,
+                             label=f"map-{j}")
+                    for j, (s, e) in enumerate(spans)])
+        results = join.run(tasks)
+        combined = state["combined"]
+        cancelled = set(join.cancelled)
+        out_vals: List[Any] = [None] * n
+        wasted = 0
+        for j, (s, e) in enumerate(spans):
+            vals = results[nm + j]
+            if nm + j in cancelled or vals is None:
+                continue
+            for i in range(s, e):
+                if combined[i]:
+                    out_vals[i] = vals[i - s]
+                else:
+                    wasted += 1
+        if wasted:
+            join.note_wasted(wasted)
+        node.info["member_masks"] = [list(m) for m in masks]
+        node.info["member_report_slots"] = slots
+        surv = [v for v, keep in zip(out_vals, combined) if keep]
+        return t.filter_mask(combined).with_column(out_col, surv)
+
+    node.fn = fn
+    return node
+
+
+def _speculate_maps(ctx: SemanticContext, source: Table, nodes: List,
+                    rewrites: List[str],
+                    obligations: List[Obligation], mode: str,
+                    objective: str
+                    ) -> Tuple[List, List[SpeculationDecision]]:
+    """Fuse each eligible filter->map edge (an ``llm_filter`` or chosen
+    ``llm_spec_chain`` directly feeding an ``llm_complete`` /
+    ``llm_complete_json``) into one ``llm_spec_map`` node when the
+    decision model says the overlap pays."""
+    out: List = []
+    decisions: List[SpeculationDecision] = []
+    rows = float(len(source))
+    i = 0
+    while i < len(nodes):
+        node = nodes[i]
+        nxt = nodes[i + 1] if i + 1 < len(nodes) else None
+        if (node.op in ("llm_filter", "llm_spec_chain")
+                and nxt is not None
+                and nxt.op in ("llm_complete", "llm_complete_json")):
+            decision, rows_out = _decide_spec_map(ctx, source, node, nxt,
+                                                  rows, mode, objective)
+            decisions.append(decision)
+            if decision.chosen:
+                out.append(_make_spec_map_node(ctx, node, nxt))
+                rule = (f"speculate(map past filter: "
+                        f"spec_waves={decision.spec_waves} vs "
+                        f"serial_waves={decision.serial_waves}, "
+                        f"wasted<={decision.wasted_requests})")
+                rewrites.append(rule)
+                # claim: the node ANDs exactly the upstream predicates
+                # and maps exactly the downstream prompt over survivors
+                obligations.append(Obligation(
+                    rule=rule, kind="mask_equivalence",
+                    payload={"spec_map": True,
+                             "prompts": [m["prompt"] for m in
+                                         _filter_members(node)]}))
+                rows = rows_out
+                i += 2
+                continue
+            rewrites.append(
+                f"rejected(speculate map past filter: {decision.reason})")
+        rows, _ = estimate_node_cost(ctx, node, rows, source)
+        out.append(node)
+        i += 1
+    return out, decisions
+
+
+# ---------------------------------------------------------------------------
+# rule 4c: retrieval-aware rerank speculation
+# ---------------------------------------------------------------------------
+def _decide_spec_rerank(ctx: SemanticContext, source: Table, retr, rr,
+                        rows_in: float, mode: str, objective: str
+                        ) -> Tuple[SpeculationDecision, float]:
+    """Estimate serial vs speculative execution of one retrieval->rerank
+    edge.  Serial: the rerank's chained windows queue behind the
+    retrieval's embed waves.  Speculative: warmup windows over the
+    BM25-predicted candidates overlap the dense embeds and fusion; the
+    authoritative pass reconciles through the window cache, so only
+    mispredicted queries pay again (``SPEC_RERANK_MISMATCH_PRIOR``)."""
+    rows_out, rcost = _retrieval_estimate(ctx, retr, rows_in, source,
+                                          set())
+    n = int(round(rows_out))
+    decision = SpeculationDecision(
+        kind="rerank",
+        members=[ctx.resolve_prompt(rr.info["prompt"])[1]],
+        rows_in=n)
+    if n <= 0:
+        decision.reason = "no candidate rows"
+        return decision, rows_out
+    window, stride = 10, 5
+    windows = 1 if n <= window else 1 + -(-(n - window) // stride)
+    decision.serial_requests = rcost.requests + windows
+    decision.wasted_requests = int(
+        math.ceil(windows * SPEC_RERANK_MISMATCH_PRIOR))
+    decision.spec_requests = (decision.serial_requests
+                              + decision.wasted_requests)
+    decision.serial_waves = rcost.waves + windows
+    decision.spec_waves = max(rcost.waves, windows)
+
+    if mode == "always":
+        decision.chosen = True
+        decision.reason = "forced by speculate='always'"
+        return decision, rows_out
+    cap = _waste_cap(ctx, decision.serial_requests, objective)
+    if decision.wasted_requests > cap:
+        decision.reason = (f"expected waste {decision.wasted_requests} "
+                           f"requests exceeds cap {cap:.0f}")
+    else:
+        decision.chosen = decision.spec_waves < decision.serial_waves
+        decision.reason = (
+            f"uncalibrated waves {decision.spec_waves} "
+            f"{'<' if decision.chosen else '>='} {decision.serial_waves}")
+    return decision, rows_out
+
+
+def _speculate_rerank(ctx: SemanticContext, source: Table, nodes: List,
+                      rewrites: List[str],
+                      obligations: List[Obligation], mode: str,
+                      objective: str
+                      ) -> Tuple[List, List[SpeculationDecision]]:
+    """Fuse each eligible ``hybrid_topk`` -> ``llm_rerank`` edge into a
+    ``spec_rerank`` node that warms the rerank window cache over the
+    BM25-predicted candidates while the dense side finishes.
+
+    Structural guards: the prediction cache must be enabled (it IS the
+    reconciliation mechanism — without it warmup results cannot carry
+    over to the authoritative pass), and the rerank must not read the
+    retrieval's *computed* columns — the fused score and its rank are
+    unknowable before fusion, so predicted tuples would never
+    byte-match.  Joined corpus columns are fine: the BM25 side predicts
+    which documents expand, and their content is known up front."""
+    from .retrieval_ops import make_spec_rerank_fn
+    from .pipeline import PlanNode      # local import: avoid cycle
+
+    out: List = []
+    decisions: List[SpeculationDecision] = []
+    rows = float(len(source))
+    i = 0
+    while i < len(nodes):
+        node = nodes[i]
+        nxt = nodes[i + 1] if i + 1 < len(nodes) else None
+        if (node.op == "hybrid_topk" and nxt is not None
+                and nxt.op == "llm_rerank"):
+            if not ctx.enable_cache:
+                rewrites.append("rejected(speculate rerank: prediction "
+                                "cache disabled)")
+            elif (set(nxt.info.get("cols", ()))
+                  | {nxt.info.get("by")}) & {
+                      node.info.get("out"),
+                      str(node.info.get("out")) + "_rank"}:
+                rewrites.append("rejected(speculate rerank: rerank reads "
+                                "the fused score/rank columns)")
+            else:
+                decision, rows_out = _decide_spec_rerank(
+                    ctx, source, node, nxt, rows, mode, objective)
+                decisions.append(decision)
+                if decision.chosen:
+                    info = {"k": node.info["k"],
+                            "by": nxt.info.get("by"),
+                            "outs": list(node.info.get("outs", ())),
+                            "retr_op": node.op,
+                            "members": list(decision.members),
+                            "_retr": node.info,
+                            "_rerank": {
+                                "model": nxt.info["model"],
+                                "prompt": nxt.info["prompt"],
+                                "cols": list(nxt.info["cols"]),
+                                "by": nxt.info.get("by")}}
+                    spec = PlanNode("spec_rerank", info)
+                    spec.fn = make_spec_rerank_fn(ctx, spec)
+                    out.append(spec)
+                    rule = (f"speculate(rerank over retrieval: "
+                            f"spec_waves={decision.spec_waves} vs "
+                            f"serial_waves={decision.serial_waves}, "
+                            f"wasted<={decision.wasted_requests})")
+                    rewrites.append(rule)
+                    # claim: the authoritative rerank runs over the
+                    # full fused top-k — warmup only pre-fills the
+                    # window cache, never changes the candidate set
+                    obligations.append(Obligation(
+                        rule=rule, kind="recall_contract",
+                        payload={"spec_rerank": True,
+                                 "key": semantic_key(node),
+                                 "k": node.info["k"]}))
+                    rows = rows_out
+                    i += 2
+                    continue
+                rewrites.append(
+                    f"rejected(speculate rerank: {decision.reason})")
+        rows, _ = estimate_node_cost(ctx, node, rows, source)
+        out.append(node)
+        i += 1
     return out, decisions
 
 
@@ -1354,11 +1944,14 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
     would run the completion over the whole input, so it is rejected).
 
     ``speculate`` (``None``/``False`` off, ``True``/``"auto"``
-    cost-gated, ``"always"`` forced) runs the speculative filter-chain
-    rule last, over the cost-ordered chains: each surviving
-    ``llm_filter`` chain of length >= 2 is either replaced by a
-    concurrent mask-join node or kept serial, per the calibrated
-    decision recorded in ``OptimizedPlan.spec_decisions``.
+    cost-gated, ``"always"`` forced) runs the speculative-pipelining
+    rules last, over the cost-ordered plan: ``llm_filter`` chains of
+    length >= 2 may become concurrent mask-join nodes (whole chain or
+    a prefix), filter->map edges may become ``llm_spec_map`` nodes,
+    and ``hybrid_topk``->``llm_rerank`` edges may become
+    ``spec_rerank`` nodes — each per the calibrated decision recorded
+    in ``OptimizedPlan.spec_decisions`` (the waste cap widens 1.25x
+    under the latency objective and narrows 0.8x under cost).
 
     ``objective`` (``"latency"``/``"cost"``, default the context's) sets
     the rank the cost gates compare under: ``latency`` accepts a rewrite
@@ -1400,7 +1993,11 @@ def optimize_plan(ctx: SemanticContext, source: Table, nodes: Sequence,
         mode = "always" if speculate == "always" else "auto"
         new, spec_decisions = _speculate_chains(ctx, source, new,
                                                 rewrites, obligations,
-                                                mode)
+                                                mode, objective)
+        for rule_fn in (_speculate_maps, _speculate_rerank):
+            new, more = rule_fn(ctx, source, new, rewrites, obligations,
+                                mode, objective)
+            spec_decisions.extend(more)
 
     if rewrites:
         # the one claim every rewrite shares: the plan's final output

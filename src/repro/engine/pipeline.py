@@ -45,19 +45,29 @@ batch composition, so collected tables are bit-identical; only request
 density changes (fewer, fuller batches — the TPU step stays dense when
 concurrency is highest).  ``copack=False`` is the escape hatch.
 
-**Speculative filter chains** (``collect(speculate=...)`` or the
-context's ``speculate`` knob): a chain of k ``llm_filter`` nodes
-normally costs k sequential provider round-trips, because each member
-waits for its predecessor's survivors.  With speculation the optimizer
-may fan all members out over the chain's *input* concurrently and AND
-the masks — the surviving stream is bit-identical, the critical path
-collapses to ~1 round-trip, and the price is extra requests over
-tuples an earlier filter would have eliminated.  The per-chain
-decision is driven by the calibrated cost model (observed latency
-percentiles, retry rates and batch sizes from the ``CalibrationStore``
-sidecar) and the expected waste — predicted from recorded selectivity
-and capped by ``ctx.speculate_waste_cap`` — is reported in
-``explain()``'s "Speculation:" section.
+**Speculative pipelining** (``collect(speculate=...)`` or the
+context's ``speculate`` knob): serial plans stall wherever a node
+waits on an upstream LLM round-trip.  The optimizer speculates across
+three such edges.  *Filter chains*: a chain of k ``llm_filter`` nodes
+normally costs k sequential round-trips; speculation fans a chosen
+*prefix* of members out over the chain's input concurrently and ANDs
+the masks, keeping the expensive tail serial on survivors (the split
+minimizing estimated wall time under the waste cap).  *Map past
+filter*: a map (``llm_complete``/``llm_complete_json``) downstream of
+a filter dispatches completions for the filter's *input* rows while
+the mask is still in flight — chunks whose rows all die are cancelled,
+and results for masked-out rows are discarded (their cache entries
+survive).  *Retrieval-aware rerank*: ``llm_rerank`` downstream of
+``hybrid_topk`` starts reranking the first retriever's candidate set
+while fusion finishes, warming the prediction cache; the final top-k
+is reconciled against the authoritative retrieval.  Every decision is
+driven by the calibrated cost model (observed latency percentiles,
+retry rates and batch sizes from the ``CalibrationStore`` sidecar);
+the expected waste — predicted from recorded selectivity — is capped
+by ``ctx.speculate_waste_cap`` (widened 1.25x under
+``objective="latency"``, narrowed 0.8x under ``"cost"``) and reported
+per edge in ``explain()``'s "Speculation:" section.  Surviving streams
+are bit-identical to the serial plan in all three shapes.
 
 **First-class retrieval operators** (``retrieval_ops.py``): paper
 Query 3 is a plan, not a script — ``vector_topk`` / ``bm25_topk`` /
@@ -497,6 +507,8 @@ class Pipeline:
         if shared:
             self.ctx.copack_begin(shared)
         try:
+            # node-group fan-out, joined below; batches themselves ride
+            # the scheduler pool  # flocklint: ignore[FLKL106]
             threads = [threading.Thread(target=worker, args=(k, n),
                                         name=f"flockjax-node-{n.op}")
                        for k, n in enumerate(group)]

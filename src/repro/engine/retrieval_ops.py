@@ -49,8 +49,9 @@ import numpy as np
 
 from repro.core.cache import corpus_fingerprint
 from repro.core.functions import (SemanticContext, embedding_pack_key,
-                                  llm_embedding)
+                                  llm_embedding, llm_rerank)
 from repro.core.fusion import fusion
+from repro.core.scheduler import SpecTask, SpeculativeJoin
 from repro.retrieval import BM25Index, ensure_index
 
 from .table import Table
@@ -141,12 +142,15 @@ def _embed_corpus_and_queries(ctx: SemanticContext, model_spec,
     ctx.copack_begin({ident: 2})
     try:
         threads = [
+            # exactly two bounded submitters under one activated pack
+            # identity, joined below  # flocklint: ignore[FLKL106]
             threading.Thread(
                 target=worker,
                 args=(0, lambda: ensure_index(ctx, model_spec,
                                               corpus_texts,
                                               fingerprint=fingerprint)),
                 name="flockjax-embed-corpus"),
+            # flocklint: ignore[FLKL106]
             threading.Thread(
                 target=worker,
                 args=(1, lambda: llm_embedding(ctx, model_spec, queries)),
@@ -292,5 +296,127 @@ def make_retrieval_fn(ctx: SemanticContext, op: str, info: dict):
             return Table(cols)
 
         return t.lateral(child)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# speculative retrieval->rerank executor
+# ---------------------------------------------------------------------------
+def make_spec_rerank_fn(ctx: SemanticContext, node):
+    """Executor for one ``spec_rerank`` plan node: ``hybrid_topk``
+    followed by a grouped ``llm_rerank``, with the rerank's window
+    cache warmed over BM25-predicted candidates WHILE the dense
+    retriever and fusion finish.
+
+    The BM25 side of a hybrid node is provider-free (postings scan), so
+    the final per-query top-k can be *predicted* before any embed
+    request returns.  Warmup tasks rerank the predicted candidate
+    tuples — their permutations are discarded, but every rerank window
+    lands in the prediction cache keyed by its serialized tuple
+    content.  The mandatory task runs the full retrieval; when it
+    resolves, warmups for queries whose predicted list does not match
+    the fused top-k (content and order both) are cancelled if not yet
+    started, or counted as wasted rows if already dispatched.  The
+    authoritative rerank then runs over the REAL expanded table —
+    matched groups hit the cache window-for-window, mispredicted ones
+    pay the provider exactly as the serial plan would — so the output
+    is bit-identical to ``hybrid_topk`` -> ``llm_rerank`` by
+    construction."""
+    info = node.info
+    retr_info = info["_retr"]
+    rr = info["_rerank"]
+    retr_fn = make_retrieval_fn(ctx, info["retr_op"], retr_info)
+
+    def rerank_table(expanded: Table) -> Table:
+        """The serial plan's grouped rerank, verbatim."""
+        tuples = [{c: r[c] for c in rr["cols"]} for r in expanded.rows()]
+        if rr.get("by") is None:
+            perm = llm_rerank(ctx, rr["model"], rr["prompt"], tuples)
+            return expanded.take(perm)
+        groups: dict = {}
+        for i, v in enumerate(expanded.column(rr["by"])):
+            groups.setdefault(v, []).append(i)
+        order: List[int] = []
+        for idxs in groups.values():
+            perm = llm_rerank(ctx, rr["model"], rr["prompt"],
+                              [tuples[i] for i in idxs])
+            order.extend(idxs[p] for p in perm)
+        return expanded.take(order)
+
+    def fn(t: Table) -> Table:
+        if not len(t):
+            return retr_fn(t)
+        corpus = retr_info["corpus"]
+        names = {c: (c + "_doc" if c in t.column_names else c)
+                 for c in corpus.column_names}
+        inv = {v: c for c, v in names.items()}
+        parents = list(t.rows())
+        queries = [str(v) for v in t.column(retr_info["query_col"])]
+        sel = _corpus_selection(retr_info)
+        k_eff = min(retr_info["k"], len(sel))
+        pred = _bm25_candidates(retr_info, queries, sel, k_eff)
+        rr_cols = list(rr["cols"])
+        by = rr.get("by")
+
+        def value(pi: int, d: int, c: str):
+            if c in inv:
+                return corpus.columns[inv[c]][d]
+            return parents[pi][c]
+
+        # predicted expanded rows (parent order x rank order), grouped
+        # exactly as the serial rerank groups the real expansion
+        pgroups: dict = {}
+        for pi in range(len(parents)):
+            for d in pred[pi][0]:
+                key = value(pi, d, by) if by is not None else None
+                pgroups.setdefault(key, []).append((pi, d))
+        pkeys = list(pgroups)
+        ptuples = {key: [{c: value(pi, d, c) for c in rr_cols}
+                         for pi, d in pgroups[key]] for key in pkeys}
+
+        join = SpeculativeJoin(ctx.scheduler)
+        state: dict = {"mismatched": set()}
+
+        def authoritative() -> Table:
+            expanded = retr_fn(t)
+            tuples = [{c: r[c] for c in rr_cols}
+                      for r in expanded.rows()]
+            if by is None:
+                agroups = {None: list(range(len(tuples)))}
+            else:
+                agroups = {}
+                for i, v in enumerate(expanded.column(by)):
+                    agroups.setdefault(v, []).append(i)
+            mismatched = set()
+            for j, key in enumerate(pkeys):
+                actual = ([tuples[i] for i in agroups[key]]
+                          if key in agroups else None)
+                if actual != ptuples[key]:
+                    mismatched.add(key)
+                    join.cancel(1 + j)      # warmup windows can't hit
+            state["mismatched"] = mismatched
+            return expanded
+
+        def make_warmup(key):
+            def thunk():
+                llm_rerank(ctx, rr["model"], rr["prompt"], ptuples[key])
+                return key
+            return thunk
+
+        tasks = ([SpecTask(authoritative, rows=len(t), label="retrieve",
+                           mandatory=True)]
+                 + [SpecTask(make_warmup(key), rows=len(ptuples[key]),
+                             label=f"warmup-{j}")
+                    for j, key in enumerate(pkeys)])
+        results = join.run(tasks)
+        expanded = results[0]
+        cancelled = set(join.cancelled)
+        wasted = sum(len(ptuples[key]) for j, key in enumerate(pkeys)
+                     if key in state["mismatched"]
+                     and (1 + j) not in cancelled)
+        if wasted:
+            join.note_wasted(wasted)
+        return rerank_table(expanded)
 
     return fn

@@ -208,6 +208,51 @@ def test_broad_except_outside_scope_ok():
 
 
 # ---------------------------------------------------------------------------
+# FLKL106: ad-hoc thread spawning
+# ---------------------------------------------------------------------------
+def test_thread_in_engine_flagged():
+    src = ("import threading\n"
+           "th = threading.Thread(target=f)\n")
+    assert _codes(_lint(src, "repro/engine/retrieval_ops.py")) \
+        == ["FLKL106"]
+
+
+def test_thread_in_core_flagged():
+    src = ("import threading\n"
+           "th = threading.Thread(target=f)\n")
+    assert _codes(_lint(src, "repro/core/functions.py")) == ["FLKL106"]
+
+
+def test_thread_in_scheduler_ok():
+    # core/scheduler.py IS the sanctioned home for thread spawning
+    src = ("import threading\n"
+           "th = threading.Thread(target=worker)\n")
+    assert _lint(src, "repro/core/scheduler.py") == []
+
+
+def test_thread_outside_scope_ok():
+    src = ("import threading\n"
+           "th = threading.Thread(target=f)\n")
+    assert _lint(src, "repro/launch/serve.py") == []
+    assert _lint(src, "repro/retrieval/vector.py") == []
+
+
+def test_thread_with_pragma_ok():
+    src = ("import threading\n"
+           "# joined below  # flocklint: ignore[FLKL106]\n"
+           "th = threading.Thread(target=f)\n")
+    assert _lint(src, "repro/engine/pipeline.py") == []
+
+
+def test_non_thread_threading_calls_ok():
+    src = ("import threading\n"
+           "lock = threading.Lock()\n"
+           "cond = threading.Condition()\n"
+           "ev = threading.Event()\n")
+    assert _lint(src, "repro/engine/pipeline.py") == []
+
+
+# ---------------------------------------------------------------------------
 # the real tree is clean — this is the CI gate
 # ---------------------------------------------------------------------------
 def test_src_tree_has_zero_violations():

@@ -1,0 +1,617 @@
+"""Cross-operator speculative pipelining tests (ISSUE 10).
+
+The tentpole contract: every speculation shape the optimizer knows —
+partial filter-chain prefixes, map-past-filter (``llm_spec_map``) and
+retrieval-aware rerank (``spec_rerank``) — produces output tables
+bit-identical to serial execution, across ``speculate=False``/
+``"auto"``/``"always"``, including overflow-poisoned rows and chunks
+cancelled mid-flight.  Verified property-based (hypothesis) plus
+deterministic spot checks.
+
+Also covered here:
+
+  * the generalized ``SpeculativeJoin`` primitive: bounded runner
+    fan-out, the in-flight row budget, cancellation semantics
+    (cancelled work NEVER reaches the provider), mandatory tasks, and
+    the ``spec_dispatched``/``spec_cancelled``/``spec_wasted_rows``
+    counters;
+  * satellite regression: speculative runs feed the
+    ``SelectivityStore`` exactly like serial ones (mask densities from
+    speculated members are recorded, so later decisions see them);
+  * decision plumbing: objective-aware waste caps, waste-cap
+    rejections, and the ``explain()`` "Speculation:" section for the
+    new shapes.
+"""
+
+import re
+import threading
+import time
+
+import pytest
+
+from repro.core import (MockProvider, RequestScheduler, SemanticContext,
+                        SpecTask, SpeculativeJoin)
+from repro.core.batching import ContextOverflowError
+from repro.engine import Pipeline, Table
+
+try:        # property tests need the optional hypothesis dependency
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+    SMALL = settings(max_examples=20, deadline=None)
+    TINY = settings(max_examples=8, deadline=None)
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _behaviour(kind, prefix, rows):
+    """Content-based filter verdicts (``has P<k>`` passes rows carrying
+    the ``P<k>`` marker); a BOOM row poisons its batch with a context
+    overflow (the splitter isolates it; it decodes to False).  Map and
+    rerank kinds fall through to the provider's content-hash answers,
+    which are deterministic per tuple — serial and speculative runs see
+    identical per-tuple results regardless of batch composition."""
+    if kind != "filter":
+        return None
+    if any("BOOM" in r for r in rows):
+        raise ContextOverflowError("poisoned row in batch")
+    marker = re.search(r"has (P\d+)", prefix).group(1)
+    return [f"{i}: "
+            f"{'true' if marker in r and 'GIBBER' not in r else 'false'}"
+            for i, r in enumerate(rows)]
+
+
+def _member_model(k: int, **kw) -> dict:
+    base = {"model": f"pm{k}", "context_window": 100_000,
+            "max_output_tokens": 8, "max_concurrency": 8}
+    base.update(kw)
+    return base
+
+
+CHAT = {"model": "chat", "context_window": 100_000,
+        "max_output_tokens": 16, "max_concurrency": 8}
+EMB = {"model": "e", "embedding_dim": 16, "context_window": 4096}
+
+
+def _texts(rows, n_filters):
+    out = []
+    for i, (passes, kind) in enumerate(rows):
+        markers = " ".join(f"P{k}" for k in range(n_filters)
+                           if passes[k])
+        inject = {"ok": "", "boom": " BOOM"}[kind]
+        out.append(f"r{i} doc {markers}{inject}")
+    return out
+
+
+def _map_pipeline(ctx, table, n_filters, map_op="llm_complete"):
+    pipe = Pipeline(ctx, table, "docs")
+    for k in range(n_filters):
+        pipe = pipe.llm_filter(_member_model(k), {"prompt": f"has P{k}"},
+                               ["text"])
+    return getattr(pipe, map_op)("m_out", CHAT, {"prompt": "summarize"},
+                                 ["text"])
+
+
+def _collect_modes(build, modes=(False, "auto", "always"), **collect_kw):
+    """Collect one plan under each speculate mode on a fresh context;
+    returns {mode: (rows, executed ops)}."""
+    out = {}
+    for mode in modes:
+        with RequestScheduler(max_workers=8) as sched:
+            ctx = SemanticContext(provider=MockProvider(_behaviour),
+                                  scheduler=sched)
+            pipe = build(ctx)
+            t = pipe.collect(speculate=mode, **collect_kw)
+            out[mode] = (t.rows(), [n.op for n in pipe._executed_nodes])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shape: map past filter
+# ---------------------------------------------------------------------------
+def test_spec_map_bit_identical_and_verifies():
+    texts = _texts([((i % 2 == 0, True), "boom" if i == 7 else "ok")
+                    for i in range(20)], 2)
+    table = Table({"text": texts})
+    res = _collect_modes(
+        lambda ctx: _map_pipeline(ctx, table, 1), verify="strict")
+    assert res[False][0] == res["auto"][0] == res["always"][0]
+    assert "llm_spec_map" in res["always"][1]
+    assert all(op != "llm_spec_map" for op in res[False][1])
+
+
+def test_spec_map_absorbs_spec_chain_members():
+    # a chain of 2 filters + map: the map rule composes with chain
+    # speculation and the absorbed members' masks stay reconstructible
+    texts = _texts([((i % 2 == 0, i % 3 != 0), "ok") for i in range(18)],
+                   2)
+    table = Table({"text": texts})
+    res = _collect_modes(lambda ctx: _map_pipeline(ctx, table, 2),
+                         modes=(False, "always"), verify="strict")
+    assert res[False][0] == res["always"][0]
+    assert "llm_spec_map" in res["always"][1]
+
+
+def test_spec_map_writes_discarded_rows_to_cache():
+    # completions for masked-out rows are discarded from the output but
+    # land in the prediction cache: a later unfiltered map over the
+    # same tuples must hit the cache instead of the provider
+    texts = [f"r{i} doc {'P0' if i % 2 else ''}" for i in range(12)]
+    table = Table({"text": texts})
+    with RequestScheduler(max_workers=8) as sched:
+        ctx = SemanticContext(provider=MockProvider(_behaviour),
+                              scheduler=sched, speculate="always")
+        pipe = _map_pipeline(ctx, table, 1)
+        pipe.collect()
+        calls_after_spec = ctx.provider.stats.calls
+        out2 = (Pipeline(ctx, table, "docs")
+                .llm_complete("m_out", CHAT, {"prompt": "summarize"},
+                              ["text"])
+                .collect(speculate=False))
+        assert len(out2) == 12
+        # every tuple was speculated on, so the full map is cache-only
+        assert ctx.provider.stats.calls == calls_after_spec
+
+
+def test_spec_map_rejected_by_tight_cap_runs_serially():
+    table = Table({"text": [f"r{i} doc P1" for i in range(40)]})
+    ctx = SemanticContext(provider=MockProvider(_behaviour),
+                          enable_cache=False, enable_dedup=False,
+                          max_batch=4, speculate_waste_cap=0.05)
+    ctx.record_selectivity("inline:has P0", 1, 100)     # ~1% pass
+    pipe = _map_pipeline(ctx, table, 1)
+    plan = pipe._plan(True)
+    assert any("rejected(speculate map past filter:" in rw
+               and "exceeds cap" in rw for rw in plan.rewrites)
+    assert all(n.op != "llm_spec_map" for n in plan.nodes)
+    out = pipe.collect(speculate=True)
+    assert len(out) == 0
+
+
+def test_map_cap_objective_flip():
+    # the same marginal plan flips with the scheduling objective: the
+    # latency objective widens the waste cap 1.25x, cost narrows it
+    # 0.8x — some cap in between accepts under latency only
+    from repro.engine.optimizer import SPEC_CAP_OBJECTIVE_MULT
+    table = Table({"text": [(f"r{i} doc P1 P0" if i % 2 else
+                             f"r{i} doc P1") for i in range(32)]})
+
+    def decide(objective, cap):
+        ctx = SemanticContext(provider=MockProvider(_behaviour),
+                              enable_cache=False, enable_dedup=False,
+                              max_batch=4, speculate_waste_cap=cap)
+        ctx.record_selectivity("inline:has P0", 50, 100)
+        pipe = _map_pipeline(ctx, table, 1)
+        plan = pipe._plan(True, objective)
+        (d,) = [x for x in plan.spec_decisions if x.kind == "map"]
+        return d
+
+    mults = SPEC_CAP_OBJECTIVE_MULT
+    assert mults["latency"] > 1.0 > mults["cost"]
+    flipped = False
+    for cap in (x / 100.0 for x in range(1, 40)):
+        d_lat, d_cost = decide("latency", cap), decide("cost", cap)
+        assert d_lat.wasted_requests == d_cost.wasted_requests
+        if d_lat.chosen and not d_cost.chosen:
+            assert "exceeds cap" in d_cost.reason
+            flipped = True
+            break
+    assert flipped, "no cap flips the decision between objectives"
+
+
+# ---------------------------------------------------------------------------
+# shape: partial chain prefix
+# ---------------------------------------------------------------------------
+def test_partial_chain_speculates_cheap_prefix_only():
+    # members 0/1 are calibrated cheap, member 2 is calibrated very
+    # slow AND serialized (concurrency 1): speculating it over the full
+    # input costs 4 waves x 5 s, so the best split keeps it serial on
+    # survivors (1 wave) while members 0/1 fan out
+    texts = [f"r{i} doc {'P0' if i % 10 == 0 else ''} P1 P2"
+             for i in range(24)]
+    table = Table({"text": texts})
+
+    def build(ctx):
+        pipe = Pipeline(ctx, table, "docs")
+        for k in range(2):
+            pipe = pipe.llm_filter(_member_model(k),
+                                   {"prompt": f"has P{k}"}, ["text"])
+        return pipe.llm_filter(_member_model(2, max_concurrency=1),
+                               {"prompt": "has P2"}, ["text"])
+
+    ctx = SemanticContext(provider=MockProvider(_behaviour),
+                          enable_cache=False, enable_dedup=False,
+                          max_batch=6)
+    for k, lat in ((0, 0.01), (1, 0.01), (2, 5.0)):
+        ctx.record_calibration(f"pm{k}@0", requests=8, retries=0,
+                               tuples=48, latencies=[lat] * 8)
+    ctx.record_selectivity("inline:has P0", 10, 100)
+    pipe = build(ctx)
+    plan = pipe._plan(True)
+    (d,) = plan.spec_decisions
+    assert d.chosen
+    assert d.split == 2 and len(d.members) == 3
+    assert "spec prefix 2" in str(d)
+    assert any("prefix=2" in rw for rw in plan.rewrites)
+    (spec,) = [n for n in plan.nodes if n.op == "llm_spec_chain"]
+    assert spec.info["split"] == 2
+
+    # and the split execution is bit-identical to serial
+    ref = build(SemanticContext(provider=MockProvider(_behaviour))) \
+        .collect(speculate=False)
+    out = pipe.collect(speculate=True, verify="strict")
+    assert out.rows() == ref.rows()
+
+
+def test_full_speculation_still_chosen_when_tail_is_cheap():
+    texts = [f"r{i} doc P0 P1 P2" for i in range(24)]
+    table = Table({"text": texts})
+    ctx = SemanticContext(provider=MockProvider(_behaviour),
+                          enable_cache=False, enable_dedup=False,
+                          max_batch=6)
+    for k in range(3):
+        ctx.record_calibration(f"pm{k}@0", requests=8, retries=0,
+                               tuples=48, latencies=[0.05] * 8)
+    pipe = Pipeline(ctx, table, "docs")
+    for k in range(3):
+        pipe = pipe.llm_filter(_member_model(k), {"prompt": f"has P{k}"},
+                               ["text"])
+    plan = pipe._plan(True)
+    (d,) = plan.spec_decisions
+    assert d.chosen and d.split == 3
+    assert "spec prefix" not in str(d)
+
+
+# ---------------------------------------------------------------------------
+# shape: retrieval-aware rerank
+# ---------------------------------------------------------------------------
+def _retrieval_fixture(n=30):
+    topics = ("joins", "indexes", "vectors")
+    corpus = Table({"content": [f"doc {i} about {topics[i % 3]} text"
+                                for i in range(n)]})
+    queries = Table({"q": ["join algorithms", "vector search"],
+                     "qid": [0, 1]})
+    return corpus, queries
+
+
+def _rerank_pipeline(ctx, corpus, queries, k=4, candidate_k=8):
+    return (Pipeline(ctx, queries, "queries")
+            .hybrid_topk("score", EMB, "q", corpus, k=k,
+                         doc_col="content", candidate_k=candidate_k)
+            .llm_rerank(CHAT, {"prompt": "most relevant"}, ["content"],
+                        by="q"))
+
+
+@pytest.mark.parametrize("k,candidate_k,n", [(4, 8, 30), (3, None, 12),
+                                             (6, 12, 48)])
+def test_spec_rerank_bit_identical_and_verifies(k, candidate_k, n):
+    corpus, queries = _retrieval_fixture(n)
+    res = _collect_modes(
+        lambda ctx: _rerank_pipeline(ctx, corpus, queries, k,
+                                     candidate_k),
+        verify="strict")
+    assert res[False][0] == res["auto"][0] == res["always"][0]
+    assert "spec_rerank" in res["always"][1]
+    assert all(op != "spec_rerank" for op in res[False][1])
+
+
+def test_spec_rerank_requires_prediction_cache():
+    corpus, queries = _retrieval_fixture(12)
+    ctx = SemanticContext(provider=MockProvider(_behaviour),
+                          enable_cache=False, speculate="always")
+    pipe = _rerank_pipeline(ctx, corpus, queries)
+    plan = pipe._plan("always")
+    assert any("rejected(speculate rerank: prediction cache" in rw
+               for rw in plan.rewrites)
+    assert all(n.op != "spec_rerank" for n in plan.nodes)
+
+
+def test_spec_rerank_rejects_score_reading_rerank():
+    corpus, queries = _retrieval_fixture(12)
+    ctx = SemanticContext(provider=MockProvider(_behaviour),
+                          speculate="always")
+    pipe = (Pipeline(ctx, queries, "queries")
+            .hybrid_topk("score", EMB, "q", corpus, k=4,
+                         doc_col="content", candidate_k=8)
+            .llm_rerank(CHAT, {"prompt": "most relevant"},
+                        ["content", "score"], by="q"))
+    plan = pipe._plan("always")
+    assert any("fused score/rank columns" in rw for rw in plan.rewrites)
+    assert all(n.op != "spec_rerank" for n in plan.nodes)
+
+
+def test_spec_rerank_warmup_prefills_window_cache():
+    # when the BM25 prediction matches the fused candidate list, the
+    # authoritative rerank's windows are cache hits: total chat calls
+    # match a pre-warmed serial run
+    corpus, queries = _retrieval_fixture(30)
+    with RequestScheduler(max_workers=8) as sched:
+        ctx = SemanticContext(provider=MockProvider(_behaviour),
+                              scheduler=sched, speculate="always")
+        pipe = _rerank_pipeline(ctx, corpus, queries)
+        out = pipe.collect()
+        (spec,) = [n for n in pipe._executed_nodes
+                   if n.op == "spec_rerank"]
+    assert len(out) == 8
+    # the explain section prices the warmup
+    text = pipe.explain()
+    assert "rerank over retrieval" in text
+    assert "Speculation:" in text
+
+
+# ---------------------------------------------------------------------------
+# property: every shape, bit for bit, across modes
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @SMALL
+    @given(
+        n_filters=st.integers(1, 3),
+        map_op=st.sampled_from(["llm_complete", "llm_complete_json"]),
+        max_batch=st.sampled_from([3, 5, 0]),
+        rows=st.lists(
+            st.tuples(st.tuples(*[st.booleans()] * 3),
+                      st.sampled_from(["ok", "ok", "ok", "boom"])),
+            min_size=0, max_size=14))
+    def test_property_spec_map_modes_identical(n_filters, map_op,
+                                               max_batch, rows):
+        # small max_batch makes several speculative chunks per map, so
+        # all-dead chunks exercise mid-flight cancellation; BOOM rows
+        # poison batches on the filter side
+        table = Table({"text": _texts(rows, n_filters)})
+        results = {}
+        for mode in (False, "auto", "always"):
+            with RequestScheduler(max_workers=8) as sched:
+                kw = {"max_batch": max_batch} if max_batch else {}
+                ctx = SemanticContext(
+                    provider=MockProvider(_behaviour), scheduler=sched,
+                    **kw)
+                pipe = _map_pipeline(ctx, table, n_filters, map_op)
+                results[mode] = pipe.collect(speculate=mode,
+                                             verify="strict").rows()
+        assert results[False] == results["auto"] == results["always"]
+
+    @SMALL
+    @given(
+        n_filters=st.integers(2, 4),
+        split_lat=st.lists(st.sampled_from([0.01, 0.5, 3.0]),
+                           min_size=4, max_size=4),
+        rows=st.lists(
+            st.tuples(st.tuples(*[st.booleans()] * 4),
+                      st.sampled_from(["ok", "ok", "boom"])),
+            min_size=0, max_size=12))
+    def test_property_partial_chain_modes_identical(n_filters,
+                                                    split_lat, rows):
+        # random member latencies drive the prefix-split search through
+        # different splits; outputs must not depend on the split chosen
+        table = Table({"text": _texts(rows, n_filters)})
+        results = {}
+        for mode in (False, "auto", "always"):
+            with RequestScheduler(max_workers=8) as sched:
+                ctx = SemanticContext(provider=MockProvider(_behaviour),
+                                      scheduler=sched, max_batch=4)
+                for k in range(n_filters):
+                    ctx.record_calibration(
+                        f"pm{k}@0", requests=8, retries=0, tuples=32,
+                        latencies=[split_lat[k]] * 8)
+                pipe = Pipeline(ctx, table, "docs")
+                for k in range(n_filters):
+                    pipe = pipe.llm_filter(_member_model(k),
+                                           {"prompt": f"has P{k}"},
+                                           ["text"])
+                results[mode] = pipe.collect(speculate=mode,
+                                             verify="strict").rows()
+        assert results[False] == results["auto"] == results["always"]
+
+    @TINY
+    @given(n_docs=st.integers(6, 24), k=st.integers(2, 5),
+           deep=st.booleans())
+    def test_property_spec_rerank_modes_identical(n_docs, k, deep):
+        corpus, queries = _retrieval_fixture(n_docs)
+        candidate_k = min(2 * k, n_docs) if deep else None
+        results = {}
+        for mode in (False, "always"):
+            with RequestScheduler(max_workers=8) as sched:
+                ctx = SemanticContext(provider=MockProvider(_behaviour),
+                                      scheduler=sched)
+                pipe = _rerank_pipeline(ctx, corpus, queries, k,
+                                        candidate_k)
+                results[mode] = pipe.collect(speculate=mode,
+                                             verify="strict").rows()
+        assert results[False] == results["always"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: speculative runs feed the SelectivityStore
+# ---------------------------------------------------------------------------
+def test_speculated_chain_records_mask_densities():
+    texts = [f"r{i} doc {'P0' if i % 2 else ''} {'P1' if i % 3 else ''}"
+             for i in range(16)]
+    table = Table({"text": texts})
+    with RequestScheduler(max_workers=8) as sched:
+        ctx = SemanticContext(provider=MockProvider(_behaviour),
+                              scheduler=sched, speculate="always")
+        pipe = Pipeline(ctx, table, "docs")
+        for k in range(2):
+            pipe = pipe.llm_filter(_member_model(k),
+                                   {"prompt": f"has P{k}"}, ["text"])
+        pipe.collect()
+        assert any(n.op == "llm_spec_chain"
+                   for n in pipe._executed_nodes)
+    # every member recorded its density over the FULL input (the
+    # speculative run evaluates all 16 rows per member)
+    for k in range(2):
+        passed, total = ctx.selectivity_stats[f"inline:has P{k}"]
+        assert total == 16
+        assert passed == sum(1 for t in texts if f"P{k}" in t)
+
+
+def test_speculated_map_records_filter_density():
+    texts = [f"r{i} doc {'P0' if i % 4 == 0 else ''}" for i in range(16)]
+    table = Table({"text": texts})
+    with RequestScheduler(max_workers=8) as sched:
+        ctx = SemanticContext(provider=MockProvider(_behaviour),
+                              scheduler=sched, speculate="always")
+        pipe = _map_pipeline(ctx, table, 1)
+        pipe.collect()
+        assert any(n.op == "llm_spec_map" for n in pipe._executed_nodes)
+    passed, total = ctx.selectivity_stats["inline:has P0"]
+    assert (passed, total) == (4, 16)
+
+
+# ---------------------------------------------------------------------------
+# SpeculativeJoin: cancellation, budgets, counters
+# ---------------------------------------------------------------------------
+def test_join_cancelled_tasks_never_run():
+    # one runner => strictly ordered starts; task 0 cancels everything
+    # downstream while it runs, so no later thunk may execute
+    join = SpeculativeJoin(max_runners=1)
+    ran = []
+
+    def first():
+        for i in range(1, 5):
+            assert join.cancel(i)
+        ran.append(0)
+        return "first"
+
+    tasks = [SpecTask(first, rows=1)]
+    tasks += [SpecTask(lambda i=i: ran.append(i), rows=1, label=f"t{i}")
+              for i in range(1, 5)]
+    results = join.run(tasks)
+    assert ran == [0]
+    assert results[0] == "first"
+    assert results[1:] == [None] * 4
+    assert join.cancelled == [1, 2, 3, 4]
+
+
+def test_join_cancelled_work_never_reaches_provider():
+    # pipeline-shaped stress: the "provider" records every call; the
+    # mandatory mask task cancels all speculative chunks before they
+    # start (single runner serializes admission)
+    provider_calls = []
+    join = SpeculativeJoin(max_runners=1)
+
+    def mask():
+        for j in range(1, 9):
+            join.cancel(j)
+        provider_calls.append("mask")
+        return [False] * 8
+
+    tasks = [SpecTask(mask, rows=8, mandatory=True)]
+    tasks += [SpecTask(lambda j=j: provider_calls.append(f"chunk{j}"),
+                       rows=1, label=f"chunk{j}") for j in range(1, 9)]
+    results = join.run(tasks)
+    assert provider_calls == ["mask"]
+    assert results[0] == [False] * 8
+    assert join.cancelled == list(range(1, 9))
+
+
+def test_join_counters_on_scheduler_stats():
+    with RequestScheduler(max_workers=4) as sched:
+        join = SpeculativeJoin(sched, max_runners=1)
+
+        def first():
+            join.cancel(2)
+            return "a"
+
+        results = join.run([SpecTask(first, rows=2),
+                            SpecTask(lambda: "b", rows=2),
+                            SpecTask(lambda: "c", rows=2)])
+        assert results == ["a", "b", None]
+        assert sched.stats.spec_dispatched == 2
+        assert sched.stats.spec_cancelled == 1
+        join.note_wasted(7)
+        join.note_wasted(0)        # no-op
+        assert sched.stats.spec_wasted_rows == 7
+
+
+def test_join_mandatory_tasks_ignore_cancellation():
+    join = SpeculativeJoin(max_runners=1)
+
+    def first():
+        join.cancel(1)
+        join.cancel(2)
+        return 0
+
+    results = join.run([SpecTask(first, rows=1),
+                        SpecTask(lambda: 1, rows=1, mandatory=True),
+                        SpecTask(lambda: 2, rows=1)])
+    assert results == [0, 1, None]
+    assert join.cancelled == [2]
+
+
+def test_join_bounds_concurrent_runners():
+    active, peak = [0], [0]
+    lock = threading.Lock()
+
+    def task():
+        with lock:
+            active[0] += 1
+            peak[0] = max(peak[0], active[0])
+        time.sleep(0.02)
+        with lock:
+            active[0] -= 1
+        return True
+
+    join = SpeculativeJoin(max_runners=3)
+    results = join.run([SpecTask(task, rows=1) for _ in range(12)])
+    assert results == [True] * 12
+    assert peak[0] <= 3
+
+
+def test_join_bounds_inflight_rows():
+    # rows cap 10, tasks of 8 rows: admission must serialize them (two
+    # tasks in flight would hold 16 > 10); a single oversized task is
+    # still admitted when nothing is in flight (progress guarantee)
+    active, peak = [0], [0]
+    lock = threading.Lock()
+
+    def task():
+        with lock:
+            active[0] += 1
+            peak[0] = max(peak[0], active[0])
+        time.sleep(0.02)
+        with lock:
+            active[0] -= 1
+        return True
+
+    join = SpeculativeJoin(max_runners=4, max_inflight_rows=10)
+    assert join.run([SpecTask(task, rows=8) for _ in range(6)]) \
+        == [True] * 6
+    assert peak[0] == 1
+    join2 = SpeculativeJoin(max_runners=2, max_inflight_rows=4)
+    assert join2.run([SpecTask(task, rows=100)]) == [True]
+
+
+def test_join_error_fails_fast_and_cancels_rest():
+    join = SpeculativeJoin(max_runners=1)
+    ran = []
+
+    def boom():
+        ran.append("boom")
+        raise RuntimeError("member failed")
+
+    with pytest.raises(RuntimeError, match="member failed"):
+        join.run([SpecTask(boom, rows=1),
+                  SpecTask(lambda: ran.append("late"), rows=1)])
+    assert ran == ["boom"]
+
+
+def test_scheduler_stats_counters_flow_from_pipeline():
+    # an always-speculated map run reports dispatches; with a filter
+    # that keeps some rows per chunk, every chunk is dispatched and the
+    # dead rows land in spec_wasted_rows deterministically
+    texts = [f"r{i} doc {'P0' if i % 2 == 0 else ''}" for i in range(16)]
+    table = Table({"text": texts})
+    with RequestScheduler(max_workers=8) as sched:
+        ctx = SemanticContext(provider=MockProvider(_behaviour),
+                              scheduler=sched, speculate="always",
+                              max_batch=4)
+        pipe = _map_pipeline(ctx, table, 1)
+        out = pipe.collect()
+        stats = sched.stats
+        assert len(out) == 8
+        assert stats.spec_dispatched >= 4       # the four map chunks
+        # alternating P0 rows leave survivors in every chunk, so no
+        # chunk is cancellable and the 8 dead rows are pure waste
+        assert stats.spec_cancelled == 0
+        assert stats.spec_wasted_rows == 8

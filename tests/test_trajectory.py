@@ -1,0 +1,165 @@
+"""Trajectory aggregator tests: BENCH_*.json snapshots fold into a
+labelled series, same-label runs replace their entry, and --check
+fails exactly on gated-metric regressions beyond the tolerance."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "benchmarks"))
+
+import trajectory  # noqa: E402
+
+
+@pytest.fixture
+def bench_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(trajectory, "BENCH_DIR", tmp_path)
+    monkeypatch.setattr(trajectory, "TRAJECTORY_PATH",
+                        tmp_path / "TRAJECTORY.json")
+    return tmp_path
+
+
+def _write_bench(bench_dir, name, doc):
+    (bench_dir / f"BENCH_{name}.json").write_text(json.dumps(doc))
+
+
+def test_aggregate_flattens_and_labels(bench_dir):
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.47}})
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.96})
+    assert trajectory.aggregate("7") == 0
+    doc = json.loads((bench_dir / "TRAJECTORY.json").read_text())
+    assert [e["label"] for e in doc["series"]] == ["7"]
+    benches = doc["series"][0]["benches"]
+    assert benches["speculative"]["speedup"] == 2.9
+    assert benches["speculative"]["filter_map.wall_ratio"] == 0.47
+    assert benches["ann"]["recall_at_k"] == 0.96
+
+
+def test_same_label_replaces_entry(bench_dir):
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.90})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.96})
+    trajectory.aggregate("7")
+    doc = json.loads((bench_dir / "TRAJECTORY.json").read_text())
+    assert len(doc["series"]) == 1
+    assert doc["series"][0]["benches"]["ann"]["recall_at_k"] == 0.96
+
+
+def test_series_grows_across_labels(bench_dir):
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.90})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.96})
+    trajectory.aggregate("8")
+    doc = json.loads((bench_dir / "TRAJECTORY.json").read_text())
+    assert [e["label"] for e in doc["series"]] == ["7", "8"]
+
+
+def test_aggregate_without_benches_fails(bench_dir):
+    assert trajectory.aggregate("7") == 1
+
+
+def test_check_passes_within_tolerance(bench_dir):
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    trajectory.aggregate("7")
+    # 10% drift in the bad direction stays under the default 25%
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.7, "filter_map": {"wall_ratio": 0.50},
+                  "rerank": {"wall_ratio": 0.55}})
+    assert trajectory.check() == 0
+
+
+def test_check_fails_on_higher_metric_drop(bench_dir):
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 1.0, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    assert trajectory.check() == 1
+
+
+def test_check_fails_on_lower_metric_growth(bench_dir):
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.90},
+                  "rerank": {"wall_ratio": 0.51}})
+    assert trajectory.check() == 1
+
+
+def test_check_tolerance_env_override(bench_dir, monkeypatch):
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.0, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    assert trajectory.check() == 1      # 31% drop vs default 25%
+    monkeypatch.setenv("BENCH_SPECULATIVE_TOL", "0.5")
+    assert trajectory.check() == 0
+
+
+def test_check_skips_new_bench_and_metric(bench_dir):
+    # baseline predates the ann bench and the rerank metric: neither
+    # gates until the next aggregate records them
+    _write_bench(bench_dir, "speculative", {"speedup": 2.9})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.9},
+                  "rerank": {"wall_ratio": 0.9}})
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.1})
+    assert trajectory.check() == 0
+
+
+def test_check_fails_on_vanished_gated_metric(bench_dir):
+    _write_bench(bench_dir, "speculative",
+                 {"speedup": 2.9, "filter_map": {"wall_ratio": 0.47},
+                  "rerank": {"wall_ratio": 0.51}})
+    trajectory.aggregate("7")
+    _write_bench(bench_dir, "speculative", {"speedup": 2.9})
+    assert trajectory.check() == 1
+
+
+def test_check_without_baseline_is_noop(bench_dir):
+    _write_bench(bench_dir, "speculative", {"speedup": 2.9})
+    assert trajectory.check() == 0
+
+
+def test_unreadable_bench_skipped(bench_dir):
+    (bench_dir / "BENCH_broken.json").write_text("{not json")
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.96})
+    assert trajectory.aggregate("7") == 0
+    doc = json.loads((bench_dir / "TRAJECTORY.json").read_text())
+    assert set(doc["series"][0]["benches"]) == {"ann"}
+
+
+def test_corrupt_trajectory_starts_fresh(bench_dir):
+    (bench_dir / "TRAJECTORY.json").write_text("][")
+    _write_bench(bench_dir, "ann", {"recall_at_k": 0.96})
+    assert trajectory.aggregate("7") == 0
+    doc = json.loads((bench_dir / "TRAJECTORY.json").read_text())
+    assert [e["label"] for e in doc["series"]] == ["7"]
+
+
+def test_real_trajectory_baseline_is_committed():
+    # the CI gate compares against THIS file; an empty or missing
+    # baseline silently disables every gate
+    path = REPO / "benchmarks" / "TRAJECTORY.json"
+    doc = json.loads(path.read_text())
+    assert doc["series"], "committed TRAJECTORY.json has no snapshots"
+    last = doc["series"][-1]["benches"]
+    for bench, metrics in trajectory.GATED_METRICS.items():
+        assert bench in last, f"baseline missing bench {bench}"
+        for metric_path, _ in metrics:
+            assert metric_path in last[bench], \
+                f"baseline missing gated metric {bench}.{metric_path}"

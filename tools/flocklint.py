@@ -27,6 +27,13 @@ mechanical rules (stdlib ``ast`` only — no third-party deps):
            reason the broad catch is load-bearing (e.g. re-raised on
            the caller thread).  Scope: ``core/``, ``engine/``,
            ``retrieval/``.
+  FLKL106  ad-hoc thread spawning: ``threading.Thread(...)`` constructed
+           outside ``core/scheduler.py``.  Unbounded per-item threads
+           oversubscribe past the scheduler's ``max_workers`` (the PR 3
+           speculative-chain bug); route concurrency through
+           ``RequestScheduler`` / ``SpeculativeJoin``, or pragma with
+           the reason a dedicated thread is load-bearing.
+           Scope: ``core/``, ``engine/``.
 
 Suppression: ``# flocklint: ignore[CODE]`` (or ``ignore[C1,C2]``) on
 the violating line or the line directly above it.
@@ -60,6 +67,7 @@ RULES = {
     "FLKL103": "nested lock acquisition violates declared lock-order",
     "FLKL104": "non-atomic sidecar staging (.with_suffix('.tmp') / os.rename)",
     "FLKL105": "bare or broad except clause",
+    "FLKL106": "threading.Thread constructed outside core/scheduler.py",
 }
 
 
@@ -134,6 +142,8 @@ class _Walker(ast.NodeVisitor):
         self.scheduler = rel.name == "scheduler.py" and _in_scope(rel, "core")
         self.atomic_scope = _in_scope(rel, "core", "retrieval")
         self.except_scope = _in_scope(rel, "core", "engine", "retrieval")
+        self.thread_scope = (_in_scope(rel, "core", "engine")
+                             and not self.scheduler)
 
     def _emit(self, code: str, lineno: int, message: str):
         if code not in _pragma_codes(self.lines, lineno):
@@ -170,6 +180,11 @@ class _Walker(ast.NodeVisitor):
                 self._emit("FLKL104", node.lineno,
                            "os.rename: use os.replace for atomic "
                            "overwrite semantics")
+        if self.thread_scope and dotted == "threading.Thread":
+            self._emit("FLKL106", node.lineno,
+                       "threading.Thread outside core/scheduler.py: "
+                       "route concurrency through RequestScheduler / "
+                       "SpeculativeJoin (or pragma with justification)")
         self.generic_visit(node)
 
     # ---- FLKL103 + lock-stack maintenance ---------------------------------
